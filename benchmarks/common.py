@@ -1,0 +1,68 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def save(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line)
+    return line
+
+
+def timeit(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def instrumented_inference(arch: str, batch=2, seq=64, fine=True,
+                           hotness=None, tools=None, steps: int = 1,
+                           pool_chunk: int = 1 << 20,
+                           pool_align: int | None = None):
+    """Run a reduced ``arch`` forward eagerly under full PASTA
+    instrumentation; returns (handler, processor, instrumenter, reports)."""
+    import jax
+    import repro.configs as C
+    import repro.core as pasta
+    from repro.core.instrument import EagerInstrumenter
+    from repro.models import init_params, forward
+
+    cfg = C.reduced(C.get(arch))
+    handler = pasta.attach()
+    tools = tools if tools is not None else [pasta.WorkingSetTool(),
+                                             pasta.MemoryTimelineTool()]
+    proc = pasta.EventProcessor(handler, tools=tools, hotness=hotness)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(1)
+    if cfg.frontend == "embed":
+        x = jax.random.normal(key, (batch, seq, cfg.d_model))
+    else:
+        x = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    inst = EagerInstrumenter(handler, fine=fine, pool_chunk=pool_chunk,
+                             pool_align=pool_align,
+                             time_source=lambda: float(max(handler._step, 0)))
+    with inst:
+        for s in range(steps):
+            handler.step_start(s)
+            with pasta.region(f"step{s}"):
+                logits, _ = forward(params, x, cfg)
+            handler.step_end(s)
+    return handler, proc, inst, proc.finalize()

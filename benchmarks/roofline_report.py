@@ -1,0 +1,124 @@
+"""Emit the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json.  Run:  PYTHONPATH=src python -m benchmarks.roofline_report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import repro.configs as configs
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load(mesh: str, tag: str = "") -> dict:
+    out = {}
+    suffix = f"__{tag}" if tag else ""
+    for arch in configs.ASSIGNED:
+        for shape in SHAPES:
+            for m in (mesh, "skip"):
+                p = os.path.join(DRY, f"{arch}__{shape}__{m}{suffix}.json")
+                if os.path.exists(p):
+                    with open(p) as f:
+                        out[(arch, shape)] = json.load(f)
+                    break
+    return out
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(cells: dict, multi: dict) -> str:
+    lines = ["| arch | shape | status | compile 1-pod / 2-pod (s) | "
+             "state GiB/dev | temp GiB/dev | HLO GFLOPs/dev | "
+             "coll GiB/dev | #coll |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), d in cells.items():
+        if d["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | SKIP (full-attention; "
+                         f"see DESIGN.md §4) | - | - | - | - | - | - |")
+            continue
+        m = multi.get((arch, shape), {})
+        temp = d.get("memory_analysis", {}).get("temp_size_in_bytes")
+        lines.append(
+            f"| {arch} | {shape} | OK | {d['compile_s']} / "
+            f"{m.get('compile_s', '-')} | "
+            f"{fmt_bytes(d.get('state_bytes_per_device'))} | "
+            f"{fmt_bytes(temp)} | "
+            f"{d['hlo']['flops_per_device'] / 1e9:.0f} | "
+            f"{fmt_bytes(d['hlo']['collective_total_bytes'])} | "
+            f"{d['hlo']['n_collectives']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells: dict) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "bottleneck | MODEL_FLOPS | useful-FLOPs ratio | roofline "
+             "frac | move the bound by |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    hints = {
+        "train_4k": "fusing the attention score chain (Pallas flash) / "
+                    "bf16 wire+score dtypes",
+        "prefill_32k": "larger KV chunks to cut online-softmax accumulator "
+                       "rewrites",
+        "decode_32k": "two-tier KV buffer to avoid the per-layer "
+                      "masked-select cache rewrite",
+        "long_500k": "state-sharded SSM update batching",
+    }
+    for (arch, shape), d in cells.items():
+        if d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {d['model_flops_total']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{hints.get(shape, '')} |")
+    return "\n".join(lines)
+
+
+def perf_variants() -> str:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DRY, "*__16x16__*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        temp = d.get("memory_analysis", {}).get("temp_size_in_bytes")
+        rows.append(f"| {d['arch']} | {d['shape']} | {d['tag']} | "
+                    f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                    f"{r['collective_s']:.3f} | {fmt_bytes(temp)} | "
+                    f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(
+        ["| arch | shape | variant | compute s | memory s | collective s | "
+         "temp GiB/dev | frac |", "|---|---|---|---|---|---|---|---|"]
+        + rows)
+
+
+def main():
+    single = load("16x16")
+    multi = load("2x16x16")
+    n_ok = sum(1 for d in single.values() if d["status"] == "ok")
+    n_skip = sum(1 for d in single.values() if d["status"] == "skipped")
+    print(f"<!-- {n_ok} compiled + {n_skip} recorded skips, single-pod; "
+          f"{sum(1 for d in multi.values() if d.get('status') == 'ok')} "
+          f"multi-pod -->\n")
+    print("### Dry-run matrix\n")
+    print(dryrun_table(single, multi))
+    print("\n### Roofline (single-pod 16×16, per chip)\n")
+    print(roofline_table(single))
+    print("\n### Perf variants\n")
+    print(perf_variants())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; detailed payloads land in
+``results/bench/*.json``.  Paper artifacts covered: Fig. 7, Table V,
+Fig. 9, Fig. 10, Figs. 11-12, Fig. 13, Fig. 14, Fig. 15 (see DESIGN.md §5
+for the artifact → reproduction mapping).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig7_kernel_freq, tablev_workingset, fig9_overhead,
+                   fig10_breakdown, fig11_12_offload, fig13_hotness,
+                   fig14_timeline, fig15_parallelism)
+    benches = [
+        ("fig7", fig7_kernel_freq.main),
+        ("tablev", tablev_workingset.main),
+        ("fig9", fig9_overhead.main),
+        ("fig10", fig10_breakdown.main),
+        ("fig11_12", fig11_12_offload.main),
+        ("fig13", fig13_hotness.main),
+        ("fig14", fig14_timeline.main),
+        ("fig15", fig15_parallelism.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches:
+        try:
+            fn()
+        except Exception:                                   # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benches: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Batched serving example: prefill + decode over the unified LM with PASTA
+operator events per phase.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-7b]
+"""
+
+import argparse
+import sys
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new-tokens", type=int, default=24)
+    args, rest = ap.parse_known_args()
+
+    sys.argv = ["serve_lm", "--arch", args.arch, "--reduced",
+                "--batch", str(args.batch), "--prompt-len", "32",
+                "--max-new-tokens", str(args.max_new_tokens),
+                "--temperature", "0.8"] + rest
+    return serve_driver.main()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""End-to-end training driver example: a ~100M-param LM for a few hundred
+steps with checkpointing, elastic restart, and PASTA instrumentation.
+
+This wraps the production driver (repro.launch.train).  On CPU the full
+124M-param paper-gpt2 config is compute-bound, so the default here trains a
+reduced config for 300 steps; pass ``--full`` for the real 124M model (slow
+on CPU; the config is the same one the dry-run compiles for the 256-chip
+mesh).
+
+    PYTHONPATH=src python examples/train_lm.py [--full] [--steps 300]
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 124M paper-gpt2 (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args, rest = ap.parse_known_args()
+
+    argv = ["--arch", "paper-gpt2", "--steps", str(args.steps),
+            "--seq-len", "128", "--global-batch", "8", "--microbatches", "2",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+            "--pasta-tools", "kernel_freq,timeline"]
+    if not args.full:
+        argv.append("--reduced")
+    sys.argv = ["train_lm"] + argv + rest
+    return train_driver.main()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

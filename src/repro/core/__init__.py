@@ -1,0 +1,33 @@
+"""PASTA-JAX core — the paper's contribution as a composable JAX module.
+
+Public surface (``import repro.core as pasta``):
+
+  * annotations: ``pasta.start / pasta.end / pasta.region`` (paper Listing 1)
+  * attachment:  ``pasta.attach()`` (per-process injection analogue)
+  * modules:     EventHandler → EventProcessor → tool collection
+  * memory:      MemoryPool (caching-allocator model)
+  * artifacts:   hlo (compiled-HLO walker), tools.roofline
+"""
+
+from .annotate import start, end, region, GridIdFilter, current_region
+from .events import Event, EventKind, COLLECTIVE_OPCODES
+from .handler import EventHandler, attach, default_handler
+from .pool import MemoryPool, MemoryObject, TensorHandle, CHUNK_ALIGN
+from .processor import (EventProcessor, analyze_access_trace,
+                        analyze_hotness_trace)
+from . import hlo
+from . import tools
+from .tools import (PastaTool, KernelFrequencyTool, WorkingSetTool,
+                    HotnessTool, MemoryTimelineTool, LocatorTool, make_tools)
+from .tools import offload, roofline
+
+__all__ = [
+    "start", "end", "region", "GridIdFilter", "current_region",
+    "Event", "EventKind", "COLLECTIVE_OPCODES",
+    "EventHandler", "attach", "default_handler",
+    "MemoryPool", "MemoryObject", "TensorHandle", "CHUNK_ALIGN",
+    "EventProcessor", "analyze_access_trace", "analyze_hotness_trace",
+    "hlo", "tools", "PastaTool", "KernelFrequencyTool", "WorkingSetTool",
+    "HotnessTool", "MemoryTimelineTool", "LocatorTool", "make_tools",
+    "offload", "roofline",
+]

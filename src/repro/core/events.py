@@ -1,0 +1,87 @@
+"""PASTA event vocabulary — the Table-II analogue for TPU/JAX.
+
+The paper's event taxonomy has three tiers:
+
+  * coarse-grained host-called API events (kernel launch, memcpy, sync, ...)
+  * fine-grained device-side operations (per-thread memory accesses, ...)
+  * high-level DL framework events (operator begin/end, tensor alloc, ...)
+
+On TPU there is no per-instruction instrumentation surface, so the fine-grained
+tier is carried by *trace buffers* (structured arrays of access records that are
+aggregated on device — see ``repro.kernels``) rather than one Python object per
+access.  Everything else maps 1:1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import time as _time
+from typing import Any
+
+
+class EventKind(enum.Enum):
+    # --- low-level, coarse-grained (host-called API analogues) -------------
+    KERNEL_LAUNCH = "kernel_launch"        # one top-level HLO instruction
+    MEMCPY = "memcpy"
+    MEMSET = "memset"
+    SYNC = "sync"
+    ALLOC = "alloc"                        # device memory object (pool chunk)
+    FREE = "free"
+    COLLECTIVE = "collective"              # all-reduce / all-gather / ...
+    COMPILE = "compile"                    # XLA compilation finished
+    # --- low-level, fine-grained (device-side) -----------------------------
+    TRACE_BUFFER = "trace_buffer"          # handle to a device access-record
+                                           # buffer; aggregated by processor
+    # --- high-level DL framework events -------------------------------------
+    OPERATOR_START = "operator_start"
+    OPERATOR_END = "operator_end"
+    TENSOR_ALLOC = "tensor_alloc"
+    TENSOR_FREE = "tensor_free"
+    REGION_START = "region_start"          # pasta.start()/pasta.end()
+    REGION_END = "region_end"
+    STEP_START = "step_start"
+    STEP_END = "step_end"
+
+
+#: kinds whose ``size`` field is known to arrive with inconsistent sign
+#: conventions across backends (the paper's normalization example: some
+#: runtimes report deallocation sizes as negative deltas).
+_SIGNED_SIZE_KINDS = (EventKind.FREE, EventKind.TENSOR_FREE)
+
+_seq = itertools.count()
+
+
+@dataclasses.dataclass
+class Event:
+    """A single normalized-or-raw PASTA event."""
+
+    kind: EventKind
+    name: str = ""
+    step: int = -1
+    time: float = dataclasses.field(default_factory=_time.perf_counter)
+    device: tuple = ()            # mesh coordinates, e.g. (pod, data, model)
+    size: int = 0                 # bytes (sign-normalized by the processor)
+    addr: int = 0                 # virtual address (pool-modelled)
+    region: tuple = ()            # annotation stack snapshot
+    attrs: dict = dataclasses.field(default_factory=dict)
+    seq: int = dataclasses.field(default_factory=lambda: next(_seq))
+    normalized: bool = False
+
+    def with_attrs(self, **kw: Any) -> "Event":
+        self.attrs.update(kw)
+        return self
+
+
+# Collective opcodes recognized in HLO text (async *-start forms are folded
+# into their base opcode by the parser; *-done carries no payload).
+COLLECTIVE_OPCODES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+    "collective-broadcast",
+)

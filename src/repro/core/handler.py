@@ -1,0 +1,147 @@
+"""PASTA event handler (paper §III-B).
+
+Abstracts the platform's event sources behind one ``emit``/``subscribe``
+surface.  Sources on TPU/JAX:
+
+  * **framework callbacks** — the trainer/server/model code calls
+    ``operator_start/operator_end``, the :class:`~repro.core.pool.MemoryPool`
+    emits tensor/object memory events, ``pasta.start/end`` emit region events;
+  * **compiled-artifact capture** — :func:`EventHandler.capture_compiled`
+    walks a compiled XLA executable and emits one aggregated KERNEL_LAUNCH /
+    COLLECTIVE event per executed instruction (with per-step multiplicities),
+    the static-but-exact TPU analogue of launch interception;
+  * **device trace buffers** — instrumented Pallas kernels append access
+    records to device-resident buffers, surfaced as TRACE_BUFFER events and
+    aggregated on device by the event processor.
+
+Handlers are deliberately tiny: a dict of subscriber lists.  The paper's
+low-overhead principle — do almost nothing at event time, aggregate in the
+processor (on device where volumes are large).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Iterable
+
+from .annotate import GridIdFilter, current_region
+from .events import Event, EventKind
+from . import hlo as hlo_mod
+
+
+class EventHandler:
+    def __init__(self, device: tuple = ()):
+        self._subs: dict = collections.defaultdict(list)
+        self.enabled = True
+        self.device = device
+        self.grid_filter = GridIdFilter()
+        self._grid_id = 0
+        self._step = -1
+
+    # ------------------------------------------------------------ subscribe
+    def subscribe(self, fn: Callable[[Event], None],
+                  kinds: Iterable = ("*",)) -> None:
+        for k in kinds:
+            key = k if isinstance(k, str) else k.value
+            self._subs[key].append(fn)
+
+    def unsubscribe_all(self) -> None:
+        self._subs.clear()
+
+    # ----------------------------------------------------------------- emit
+    def emit(self, ev: Event) -> None:
+        if not self.enabled:
+            return
+        if ev.step < 0:
+            ev.step = self._step
+        if not ev.region:
+            ev.region = current_region()
+        if not ev.device:
+            ev.device = self.device
+        for fn in self._subs.get(ev.kind.value, ()):
+            fn(ev)
+        for fn in self._subs.get("*", ()):
+            fn(ev)
+
+    # ------------------------------------------------- framework-side hooks
+    def operator_start(self, name: str, **attrs) -> Event:
+        ev = Event(EventKind.OPERATOR_START, name=name, attrs=attrs)
+        self.emit(ev)
+        return ev
+
+    def operator_end(self, name: str, **attrs) -> Event:
+        ev = Event(EventKind.OPERATOR_END, name=name, attrs=attrs)
+        self.emit(ev)
+        return ev
+
+    def step_start(self, step: int) -> None:
+        self._step = step
+        self.emit(Event(EventKind.STEP_START, name=f"step{step}", step=step))
+
+    def step_end(self, step: int, **attrs) -> None:
+        self.emit(Event(EventKind.STEP_END, name=f"step{step}", step=step,
+                        attrs=attrs))
+
+    def sync(self, name: str = "sync") -> None:
+        self.emit(Event(EventKind.SYNC, name=name))
+
+    def memcpy(self, nbytes: int, direction: str, name: str = "") -> None:
+        self.emit(Event(EventKind.MEMCPY, name=name or f"memcpy_{direction}",
+                        size=nbytes, attrs={"direction": direction}))
+
+    def trace_buffer(self, records, name: str = "", **attrs) -> None:
+        """Surface a device access-record buffer (fine-grained tier)."""
+        self.emit(Event(EventKind.TRACE_BUFFER, name=name,
+                        attrs={"records": records, **attrs}))
+
+    # ------------------------------------------- compiled-artifact capture
+    def capture_compiled(self, compiled, label: str = "",
+                         default_trip: int = 1, steps: int = 1,
+                         cost_analysis: dict | None = None):
+        """Walk a compiled executable (or HLO text) and emit kernel/collective
+        events.  Returns the :class:`repro.core.hlo.HloStats` rollup."""
+        text = compiled if isinstance(compiled, str) else compiled.as_text()
+        t0 = time.perf_counter()
+        stats = hlo_mod.analyze_text(text, default_trip=default_trip)
+        parse_s = time.perf_counter() - t0
+        self.emit(Event(EventKind.COMPILE, name=label,
+                        attrs={"parse_s": parse_s,
+                               "cost_analysis": cost_analysis or {}}))
+        for kname, count in stats.kernel_counts.items():
+            gid = self._grid_id
+            self._grid_id += 1
+            if not self.grid_filter(gid):
+                continue
+            meta = stats.kernel_meta.get(kname, {})
+            self.emit(Event(EventKind.KERNEL_LAUNCH, name=kname,
+                            attrs={"count": count * steps, "grid_id": gid,
+                                   "label": label,
+                                   "op_name": meta.get("op_name", ""),
+                                   "bytes": meta.get("bytes", 0)}))
+        for inst in stats.collective_instances:
+            self.emit(Event(EventKind.COLLECTIVE, name=inst["name"],
+                            size=int(inst["bytes"]),
+                            attrs={"opcode": inst["opcode"],
+                                   "mult": inst["mult"] * steps,
+                                   "group_size": inst["group_size"],
+                                   "label": label}))
+        return stats
+
+
+_default: EventHandler | None = None
+
+
+def default_handler() -> EventHandler:
+    global _default
+    if _default is None:
+        _default = EventHandler()
+    return _default
+
+
+def attach(handler: EventHandler | None = None) -> EventHandler:
+    """Install ``handler`` as the process-global default (the TPU analogue of
+    the paper's per-process LD_PRELOAD injection)."""
+    global _default
+    _default = handler or EventHandler()
+    return _default

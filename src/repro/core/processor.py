@@ -1,0 +1,162 @@
+"""PASTA event processor (paper §III-B) — normalize, preprocess, dispatch.
+
+Two trace-analysis execution models, mirroring the paper's Fig. 2:
+
+  * **host-resident** (Fig. 2a, the conventional baseline): raw access
+    records are copied to the host and folded one-by-one by a single Python
+    thread — the model used by Compute-Sanitizer-MemoryTracker / NVBit
+    MemTrace style tools.  Kept as the overhead-comparison baseline.
+  * **device-resident** (Fig. 2b, PASTA's contribution): records are reduced
+    *where they were produced* by vectorized device code — the Pallas TPU
+    kernels in :mod:`repro.kernels` (with an XLA fallback off-TPU) — and only
+    O(#objects) aggregates are transferred.
+
+Normalization handles cross-backend inconsistencies (the paper's example:
+deallocation sizes reported as negative deltas) and attaches region context.
+"""
+
+from __future__ import annotations
+
+import bisect
+import time
+
+import numpy as np
+
+from .events import Event, EventKind, _SIGNED_SIZE_KINDS
+from .handler import EventHandler, default_handler
+
+
+class EventProcessor:
+    def __init__(self, handler: EventHandler | None = None, tools=(),
+                 device_analysis: bool = True, hotness: dict | None = None):
+        """``hotness``: optional {"base","n_blocks","n_tbins","t_max"} — when
+        set, trace buffers are additionally reduced to time×block hotness
+        maps (Fig. 13) alongside per-object counts."""
+        self.handler = handler or default_handler()
+        self.tools = list(tools)
+        self.device_analysis = device_analysis
+        self.hotness = hotness
+        self.handler.subscribe(self._on_event, kinds=("*",))
+        for t in self.tools:
+            t.processor = self
+
+    # ------------------------------------------------------------ normalize
+    @staticmethod
+    def normalize(ev: Event) -> Event:
+        if ev.normalized:
+            return ev
+        # sign conventions: some runtimes report frees as negative deltas
+        if ev.kind in _SIGNED_SIZE_KINDS and ev.size < 0:
+            ev.size = -ev.size
+        # kernel-launch metadata extraction (grid config normalization)
+        if ev.kind is EventKind.KERNEL_LAUNCH and "count" not in ev.attrs:
+            ev.attrs["count"] = 1
+        if ev.kind is EventKind.MEMCPY:
+            ev.attrs.setdefault("direction", "d2d")
+        ev.normalized = True
+        return ev
+
+    # -------------------------------------------------------------- dispatch
+    def _on_event(self, ev: Event) -> None:
+        ev = self.normalize(ev)
+        if ev.kind is EventKind.TRACE_BUFFER:
+            self._preprocess_trace(ev)
+        for tool in self.tools:
+            if tool.wants(ev.kind):
+                tool.on_event(ev)
+
+    def add_tool(self, tool) -> None:
+        tool.processor = self
+        self.tools.append(tool)
+
+    def finalize(self) -> dict:
+        return {type(t).__name__: t.finalize() for t in self.tools}
+
+    # ------------------------------------------------------- trace analysis
+    def _preprocess_trace(self, ev: Event) -> None:
+        """Aggregate a raw access-record buffer; attach the aggregate to the
+        event so tools see small, structured data (never raw records)."""
+        records = ev.attrs.get("records")
+        objects = ev.attrs.get("objects")
+        if records is None:
+            return
+        mode = "device" if self.device_analysis else "host"
+        elapsed = 0.0
+        if objects is not None:
+            counts, elapsed = analyze_access_trace(records, objects,
+                                                   mode=mode)
+            ev.attrs["object_counts"] = counts
+        if self.hotness is not None:
+            hp = self.hotness
+            t = ev.attrs.get("time", 0.0)
+            times = np.full(len(records), t)
+            hot, el2 = analyze_hotness_trace(
+                records, times, hp["base"], hp["n_blocks"], hp["n_tbins"],
+                hp["t_max"], mode=mode,
+                block_shift=hp.get("block_shift"))
+            ev.attrs["hotness_map"] = hot
+            elapsed += el2
+        ev.attrs["analysis_s"] = elapsed
+        ev.attrs["analysis_mode"] = mode
+        ev.attrs.pop("records", None)   # aggregates only past this point
+
+
+# ---------------------------------------------------------------------------
+# Trace-analysis execution models
+# ---------------------------------------------------------------------------
+
+def analyze_access_trace(addrs, objects, mode: str = "device"):
+    """Fold raw access records into per-object access counts.
+
+    ``addrs``: int64 array of accessed byte addresses (one record per access).
+    ``objects``: list of (start, end) half-open address ranges, sorted.
+    Returns ``(counts ndarray[len(objects)], elapsed_seconds)``.
+    """
+    starts = np.asarray([o[0] for o in objects], dtype=np.int64)
+    ends = np.asarray([o[1] for o in objects], dtype=np.int64)
+    t0 = time.perf_counter()
+    if mode == "host":
+        counts = _host_analyze(addrs, starts, ends)
+    elif mode == "device":
+        from repro.kernels import ops as kops
+        counts = np.asarray(kops.object_histogram(np.asarray(addrs), starts,
+                                                  ends))
+    else:
+        raise ValueError(f"unknown analysis mode {mode!r}")
+    return counts, time.perf_counter() - t0
+
+
+def _host_analyze(addrs, starts, ends) -> np.ndarray:
+    """Fig. 2a baseline: one host thread, one record at a time."""
+    counts = np.zeros(len(starts), dtype=np.int64)
+    starts_l = starts.tolist()
+    ends_l = ends.tolist()
+    for a in np.asarray(addrs).tolist():
+        i = bisect.bisect_right(starts_l, a) - 1
+        if i >= 0 and a < ends_l[i]:
+            counts[i] += 1
+    return counts
+
+
+def analyze_hotness_trace(addrs, times, base_addr: int, n_blocks: int,
+                          n_tbins: int, t_max: float, mode: str = "device",
+                          block_shift: int | None = None):
+    """Fold (addr, time) records into a [time_bin, block] hotness map
+    (default block = 2 MiB, the UVM page-group granularity)."""
+    from repro.kernels import ops as kops
+    if block_shift is None:
+        block_shift = kops.BLOCK_SHIFT
+    t0 = time.perf_counter()
+    if mode == "host":
+        hot = np.zeros((n_tbins, n_blocks), dtype=np.int64)
+        block = 512 << block_shift
+        for a, t in zip(np.asarray(addrs).tolist(), np.asarray(times).tolist()):
+            b = (a - base_addr) // block
+            tb = min(int(t / t_max * n_tbins), n_tbins - 1)
+            if 0 <= b < n_blocks:
+                hot[tb, b] += 1
+    else:
+        hot = np.asarray(kops.hotness_histogram(
+            np.asarray(addrs), np.asarray(times), base_addr, n_blocks,
+            n_tbins, t_max, block_shift=block_shift))
+    return hot, time.perf_counter() - t0

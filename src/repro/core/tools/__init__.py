@@ -1,0 +1,45 @@
+"""Built-in PASTA tool collection + registry.
+
+Tool selection follows the paper's CLI/environment interface: set
+``PASTA_TOOL=<name>[,<name>...]`` or pass names to :func:`make_tools`.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .base import PastaTool
+from .kernel_freq import KernelFrequencyTool
+from .workingset import WorkingSetTool
+from .hotness import HotnessTool
+from .timeline import MemoryTimelineTool
+from .locator import LocatorTool
+from . import offload
+from . import roofline
+
+REGISTRY = {
+    "kernel_freq": KernelFrequencyTool,
+    "workingset": WorkingSetTool,
+    "hotness": HotnessTool,
+    "timeline": MemoryTimelineTool,
+    "locator": LocatorTool,
+}
+
+
+def make_tools(names: str | list | None = None, **kw) -> list:
+    """Instantiate tools by name; default from ``PASTA_TOOL`` env var."""
+    if names is None:
+        names = os.environ.get("PASTA_TOOL", "")
+    if isinstance(names, str):
+        names = [n.strip() for n in names.split(",") if n.strip()]
+    out = []
+    for n in names:
+        if n not in REGISTRY:
+            raise KeyError(f"unknown PASTA tool {n!r}; known: {sorted(REGISTRY)}")
+        out.append(REGISTRY[n](**kw.get(n, {})))
+    return out
+
+
+__all__ = ["PastaTool", "KernelFrequencyTool", "WorkingSetTool",
+           "HotnessTool", "MemoryTimelineTool", "LocatorTool", "offload",
+           "roofline", "REGISTRY", "make_tools"]

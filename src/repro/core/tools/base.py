@@ -1,0 +1,48 @@
+"""PASTA tool-collection template (paper §III-B "Tool collection").
+
+A tool is written by subclassing :class:`PastaTool` and overriding only the
+``on_<event-kind>`` methods it cares about — the paper's "simply overriding
+functions in the PASTA tool collection template".  ``EVENTS`` narrows which
+kinds are routed to the tool at all (low-overhead: uninteresting events never
+reach user code).  ``KNOBS`` is the paper's predefined-knob mechanism for the
+inefficiency-location utilities (e.g. ``MAX_MEM_REFERENCED_KERNEL``).
+"""
+
+from __future__ import annotations
+
+from ..events import Event, EventKind
+
+
+class PastaTool:
+    #: event kinds of interest; ("*",) means all
+    EVENTS: tuple = ("*",)
+    #: named knobs (environment-overridable selective controls)
+    KNOBS: dict = {}
+
+    def __init__(self, **knobs):
+        self.knobs = dict(self.KNOBS)
+        self.knobs.update(knobs)
+        self.processor = None       # set by EventProcessor.add_tool
+
+    # ------------------------------------------------------------- routing
+    def wants(self, kind: EventKind) -> bool:
+        return "*" in self.EVENTS or kind in self.EVENTS \
+            or kind.value in self.EVENTS
+
+    def on_event(self, ev: Event) -> None:
+        fn = getattr(self, f"on_{ev.kind.value}", None)
+        if fn is not None:
+            fn(ev)
+
+    # ------------------------------------------------------------ template
+    def finalize(self) -> dict:
+        """Produce the tool's report. Override."""
+        return {}
+
+    # default no-op hooks (subset shown; any on_<kind> name is dispatched)
+    def on_kernel_launch(self, ev: Event) -> None: ...
+    def on_tensor_alloc(self, ev: Event) -> None: ...
+    def on_tensor_free(self, ev: Event) -> None: ...
+    def on_operator_start(self, ev: Event) -> None: ...
+    def on_operator_end(self, ev: Event) -> None: ...
+    def on_trace_buffer(self, ev: Event) -> None: ...

@@ -1,0 +1,44 @@
+"""Kernel-invocation frequency tool (paper §V-B1, Fig. 7).
+
+Counts executed kernels (top-level HLO instructions × loop trip counts ×
+steps).  The paper's insight — a small subset of kernels dominates invocation
+counts — falls out of ``finalize()['top']``.
+"""
+
+from __future__ import annotations
+
+import collections
+
+from ..events import EventKind
+from .base import PastaTool
+
+
+class KernelFrequencyTool(PastaTool):
+    EVENTS = (EventKind.KERNEL_LAUNCH,)
+
+    def __init__(self, top_k: int = 20, **knobs):
+        super().__init__(**knobs)
+        self.top_k = top_k
+        self.counts: collections.Counter = collections.Counter()
+        self.by_label: dict = collections.defaultdict(collections.Counter)
+
+    def on_kernel_launch(self, ev):
+        n = int(ev.attrs.get("count", 1))
+        # collapse ssa suffixes: fusion.123 -> fusion ; keep op_name flavor
+        base = ev.name.split(".")[0]
+        self.counts[base] += n
+        self.counts[ev.name] += 0      # keep exact names discoverable
+        label = ev.attrs.get("label", "")
+        if label:
+            self.by_label[label][base] += n
+
+    def finalize(self) -> dict:
+        total = sum(self.counts.values())
+        top = self.counts.most_common(self.top_k)
+        return {
+            "total_invocations": total,
+            "distinct_kernels": sum(1 for c in self.counts.values() if c > 0),
+            "top": top,
+            "by_label": {k: dict(v.most_common(self.top_k))
+                         for k, v in self.by_label.items()},
+        }

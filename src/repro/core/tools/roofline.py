@@ -1,0 +1,88 @@
+"""Roofline tool — derives the three roofline terms from dry-run artifacts.
+
+Terms (per the assignment; the compiled SPMD module is the *per-device*
+program, so parsed FLOPs/bytes are already per-chip and divide by per-chip
+peaks — algebraically identical to global/(chips×peak)):
+
+    compute    = HLO_FLOPs_per_chip    / peak_FLOP/s
+    memory     = HLO_bytes_per_chip    / HBM_bw
+    collective = coll_bytes_per_chip   / link_bw
+
+Hardware constants: TPU v5e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+V5E = {
+    "peak_flops": 197e12,      # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,           # bytes/s per chip
+    "ici_bw": 50e9,            # bytes/s per ICI link
+    "hbm_bytes": 16 * 1024**3, # capacity per chip
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_chip: float = 0.0
+    hlo_flops_per_chip: float = 0.0
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound step time:
+        useful-FLOPs/chip / peak / step_time."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops_per_chip / V5E["peak_flops"]) / self.step_time_s
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.hlo_flops_per_chip <= 0:
+            return 0.0
+        return self.model_flops_per_chip / self.hlo_flops_per_chip
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_lb_s": self.step_time_s,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline(flops_per_chip: float, hbm_bytes_per_chip: float,
+             coll_bytes_per_chip: float, model_flops_per_chip: float = 0.0,
+             hw: dict = V5E) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_chip / hw["peak_flops"],
+        memory_s=hbm_bytes_per_chip / hw["hbm_bw"],
+        collective_s=coll_bytes_per_chip / hw["ici_bw"],
+        model_flops_per_chip=model_flops_per_chip,
+        hlo_flops_per_chip=flops_per_chip,
+    )
+
+
+def model_flops(n_params: float, n_tokens: float, training: bool = True,
+                n_active_params: float | None = None) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference fwd); MoE uses
+    N_active."""
+    n = n_active_params if n_active_params is not None else n_params
+    return (6.0 if training else 2.0) * n * n_tokens

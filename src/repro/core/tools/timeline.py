@@ -1,0 +1,51 @@
+"""Memory-timeline tool (paper §V-D, Figs. 14–15).
+
+Tracks live bytes over event order, per device, with region context — the
+ramp-up / peak / ramp-down picture of a training iteration, and the per-device
+asymmetries under DP/TP/PP that the paper's multi-GPU case study shows.
+"""
+
+from __future__ import annotations
+
+import collections
+
+from ..events import EventKind
+from .base import PastaTool
+
+
+class MemoryTimelineTool(PastaTool):
+    EVENTS = (EventKind.TENSOR_ALLOC, EventKind.TENSOR_FREE,
+              EventKind.ALLOC, EventKind.FREE, EventKind.STEP_START,
+              EventKind.STEP_END)
+
+    def __init__(self, **knobs):
+        super().__init__(**knobs)
+        self.live: dict = collections.defaultdict(int)      # device -> bytes
+        self.series: dict = collections.defaultdict(list)   # device -> [(seq, bytes, region)]
+        self.alloc_events: dict = collections.defaultdict(int)
+        self.free_events: dict = collections.defaultdict(int)
+        self.peak: dict = collections.defaultdict(int)
+
+    def _mark(self, dev, seq, region):
+        self.series[dev].append((seq, self.live[dev], "/".join(region)))
+        self.peak[dev] = max(self.peak[dev], self.live[dev])
+
+    def on_tensor_alloc(self, ev):
+        self.live[ev.device] += ev.size
+        self.alloc_events[ev.device] += 1
+        self._mark(ev.device, ev.seq, ev.region)
+
+    def on_tensor_free(self, ev):
+        self.live[ev.device] -= ev.size
+        self.free_events[ev.device] += 1
+        self._mark(ev.device, ev.seq, ev.region)
+
+    def finalize(self) -> dict:
+        devs = sorted(self.series)
+        return {
+            "devices": [str(d) for d in devs],
+            "peak_bytes": {str(d): self.peak[d] for d in devs},
+            "alloc_events": {str(d): self.alloc_events[d] for d in devs},
+            "free_events": {str(d): self.free_events[d] for d in devs},
+            "series": {str(d): self.series[d] for d in devs},
+        }

@@ -1,0 +1,7 @@
+"""PASTA device-resident analysis kernels (paper Fig. 2b) + model hot-spots.
+
+Layout per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+``ops.py`` (jitted dispatch), ``ref.py`` (pure-jnp oracle).
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""Time-series hotness aggregation (paper §V-C2) as a Pallas TPU kernel.
+
+Builds the [time-bin × 2 MiB-block] access-hotness matrix on device.  The 2-D
+histogram is expressed as a rank-expanding one-hot **matmul** so the MXU does
+the scatter:
+
+    onehot_t[t, i] = (tbin[t] == i)          # (T, TBINS)
+    onehot_b[t, j] = (block[t] == j)         # (T, BLOCK_B)
+    hist[i, j]    += onehot_t.T @ onehot_b   # MXU, exact in f32 < 2**24
+
+Grid: (n_block_tiles, n_trace_tiles), trace axis innermost so each hist tile
+accumulates in VMEM across the full stream.  VMEM per step at defaults
+(T=1024, TBINS=64, BLOCK_B=512): two one-hots (1024×64 + 1024×512)·4 B ≈
+2.4 MiB + hist tile 128 KiB — MXU-aligned (all dims multiples of 128 except
+TBINS=64, which pads one sublane tile; fine on v5e's 128×128 MXU via lane
+packing)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 1024     # trace records per tile
+BLOCK_B = 512      # memory blocks per tile
+
+
+def _kernel(addrs_ref, tbins_ref, meta_ref, hist_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    base = meta_ref[0, 0]
+    shift = meta_ref[0, 1]
+    n_tbins = hist_ref.shape[0]
+    a = addrs_ref[0, :]
+    tb = tbins_ref[0, :]
+    blk = jax.lax.shift_right_arithmetic(a - base, shift)
+    blk_local = blk - pl.program_id(0) * BLOCK_B
+    valid = (blk_local >= 0) & (blk_local < BLOCK_B) & \
+            (tb >= 0) & (tb < n_tbins) & (a >= 0)
+    t_iota = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], n_tbins), 1)
+    b_iota = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], BLOCK_B), 1)
+    onehot_t = ((tb[:, None] == t_iota) & valid[:, None]).astype(jnp.float32)
+    onehot_b = (blk_local[:, None] == b_iota).astype(jnp.float32)
+    hist_ref[...] += jax.lax.dot(onehot_t.T, onehot_b,
+                                 preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "n_tbins",
+                                              "block_shift", "interpret"))
+def hotness_histogram_pallas(addrs: jax.Array, tbins: jax.Array, base,
+                             n_blocks: int, n_tbins: int, block_shift: int,
+                             interpret: bool = False):
+    """addrs int32[N] (512 B units, -1 = padding), tbins int32[N], base
+    scalar int32 → f32[n_tbins, n_blocks]."""
+    n = addrs.shape[0]
+    assert n % BLOCK_T == 0 and n_blocks % BLOCK_B == 0, (n, n_blocks)
+    grid = (n_blocks // BLOCK_B, n // BLOCK_T)
+    meta = jnp.array([[base, block_shift]], dtype=jnp.int32)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_T), lambda bb, nn: (0, nn)),
+            pl.BlockSpec((1, BLOCK_T), lambda bb, nn: (0, nn)),
+            pl.BlockSpec((1, 2), lambda bb, nn: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_tbins, BLOCK_B), lambda bb, nn: (0, bb)),
+        out_shape=jax.ShapeDtypeStruct((n_tbins, n_blocks), jnp.float32),
+        interpret=interpret,
+    )(addrs.reshape(1, n), tbins.reshape(1, n), meta)
+    return out

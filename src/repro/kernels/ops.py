@@ -1,0 +1,104 @@
+"""Jitted dispatch wrappers for the PASTA analysis kernels.
+
+Dispatch policy:
+
+  * on TPU: the Pallas kernels (compiled);
+  * ``REPRO_PALLAS_INTERPRET=1``: Pallas kernels in interpret mode (CPU
+    correctness path used by the test sweeps);
+  * otherwise: the pure-jnp oracles in :mod:`repro.kernels.ref` compiled by
+    XLA — still the device-resident (Fig. 2b) analysis model, just without
+    hand tiling.
+
+Addresses are byte int64 at the API; kernels work in 512-byte units (int32),
+which is lossless because the pool rounds tensors to 512 B.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .trace_aggregate import BLOCK_T as AGG_BLOCK_T, BLOCK_K as AGG_BLOCK_K
+from .trace_aggregate import object_histogram_pallas
+from .hotness import BLOCK_T as HOT_BLOCK_T, BLOCK_B as HOT_BLOCK_B
+from .hotness import hotness_histogram_pallas
+
+UNIT_SHIFT = 9                 # 512-byte address units
+BLOCK_SHIFT = 12               # 2 MiB blocks = 4096 units = 2**12
+_I32_MAX = np.int32(2**31 - 1)
+
+
+def _backend() -> str:
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "ref"
+
+
+_ref_object_histogram = jax.jit(ref.object_histogram_ref)
+_ref_hotness = jax.jit(ref.hotness_histogram_ref,
+                       static_argnames=("n_blocks", "n_tbins", "block_shift"))
+
+
+def _pad_to(x: np.ndarray, mult: int, value) -> np.ndarray:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return np.concatenate([x, np.full(pad, value, dtype=x.dtype)])
+
+
+def _to_units(addrs_bytes) -> np.ndarray:
+    a = np.asarray(addrs_bytes, dtype=np.int64) >> UNIT_SHIFT
+    assert a.max(initial=0) < 2**31, "address space exceeds int32 units"
+    return a.astype(np.int32)
+
+
+def object_histogram(addrs_bytes, starts_bytes, ends_bytes):
+    """Per-object access counts. Returns int64[K]."""
+    k = len(starts_bytes)
+    a = _to_units(addrs_bytes)
+    s = _to_units(starts_bytes)
+    e = _to_units(ends_bytes)
+    assert a.shape[0] < 2**24, "split traces >16M records for exact f32 accum"
+    backend = _backend()
+    if backend == "ref":
+        return np.asarray(_ref_object_histogram(
+            jnp.asarray(a), jnp.asarray(s), jnp.asarray(e))).astype(np.int64)
+    a = _pad_to(a, AGG_BLOCK_T, -1)
+    s = _pad_to(s, AGG_BLOCK_K, _I32_MAX)
+    e = _pad_to(e, AGG_BLOCK_K, _I32_MAX)
+    counts = object_histogram_pallas(jnp.asarray(a), jnp.asarray(s),
+                                     jnp.asarray(e),
+                                     interpret=backend == "interpret")
+    return np.asarray(counts[:k]).astype(np.int64)
+
+
+def hotness_histogram(addrs_bytes, times, base_addr: int, n_blocks: int,
+                      n_tbins: int, t_max: float,
+                      block_shift: int = BLOCK_SHIFT):
+    """[time-bin × block] hotness (block = 2^block_shift 512-B units; default
+    2 MiB, the UVM page-group size). Returns int64[n_tbins, n_blocks]."""
+    a = _to_units(addrs_bytes)
+    t = np.asarray(times, dtype=np.float64)
+    tb = np.minimum((t / max(t_max, 1e-12) * n_tbins).astype(np.int32),
+                    n_tbins - 1)
+    base = np.int32(int(base_addr) >> UNIT_SHIFT)
+    backend = _backend()
+    if backend == "ref":
+        out = _ref_hotness(jnp.asarray(a), jnp.asarray(tb), base,
+                           n_blocks=n_blocks, n_tbins=n_tbins,
+                           block_shift=block_shift)
+        return np.asarray(out).astype(np.int64)
+    a_p = _pad_to(a, HOT_BLOCK_T, -1)
+    tb_p = _pad_to(tb, HOT_BLOCK_T, -1)
+    nb_p = n_blocks + ((-n_blocks) % HOT_BLOCK_B)
+    out = hotness_histogram_pallas(jnp.asarray(a_p), jnp.asarray(tb_p), base,
+                                   nb_p, n_tbins, block_shift,
+                                   interpret=backend == "interpret")
+    return np.asarray(out[:, :n_blocks]).astype(np.int64)

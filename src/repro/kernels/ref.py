@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the PASTA analysis kernels.
+
+These are the correctness references the Pallas kernels are swept against,
+and also the XLA fallback used off-TPU (the device-resident analysis model
+still holds: XLA compiles these to vectorized device code).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def object_histogram_ref(addrs: jax.Array, starts: jax.Array,
+                         ends: jax.Array) -> jax.Array:
+    """Per-object access counts.
+
+    addrs: int32[N] — accessed addresses (any unit, consistent with ranges).
+    starts/ends: int32[K] — sorted, disjoint half-open object ranges.
+    returns int32[K].
+    """
+    idx = jnp.searchsorted(starts, addrs, side="right") - 1
+    idx_c = jnp.clip(idx, 0, starts.shape[0] - 1)
+    valid = (idx >= 0) & (addrs < ends[idx_c]) & (addrs >= starts[idx_c])
+    return jax.ops.segment_sum(valid.astype(jnp.int32), idx_c,
+                               num_segments=starts.shape[0])
+
+
+def hotness_histogram_ref(addrs: jax.Array, tbins: jax.Array, base: int,
+                          n_blocks: int, n_tbins: int,
+                          block_shift: int) -> jax.Array:
+    """[time-bin × block] access hotness.
+
+    addrs: int32[N] (512 B units); tbins: int32[N] pre-binned time indices.
+    base: int32 base address (512 B units); block granularity 2^block_shift
+    units (2 MiB blocks = 4096 units → shift 12).
+    returns int32[n_tbins, n_blocks].
+    """
+    b = (addrs - base) >> block_shift
+    valid = (b >= 0) & (b < n_blocks) & (tbins >= 0) & (tbins < n_tbins)
+    b_c = jnp.clip(b, 0, n_blocks - 1)
+    t_c = jnp.clip(tbins, 0, n_tbins - 1)
+    flat = t_c * n_blocks + b_c
+    hist = jax.ops.segment_sum(valid.astype(jnp.int32), flat,
+                               num_segments=n_tbins * n_blocks)
+    return hist.reshape(n_tbins, n_blocks)

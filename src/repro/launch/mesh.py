@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; smoke tests and benchmarks see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for subprocess distribution tests (8 host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

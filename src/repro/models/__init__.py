@@ -1,0 +1,6 @@
+"""Model substrate: unified decoder LM (dense/GQA, MoE, Mamba2-SSD, hybrid)."""
+
+from .config import ModelConfig
+from .lm import (init_params, param_axes, forward, init_cache, cache_axes,
+                 cross_entropy)
+from . import layers, mamba2, moe

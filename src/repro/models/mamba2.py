@@ -1,0 +1,211 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked for TPU.
+
+Training/prefill uses the SSD chunked algorithm (arXiv:2405.21060): the
+sequence is split into chunks of Q tokens; within a chunk the recurrence is
+materialized as a (Q×Q) lower-triangular "attention-like" matrix (MXU
+friendly), and chunk states are passed through a scan — O(S·Q) instead of
+O(S²), O(1) state for decode.
+
+State decay products are computed in log space (segment-sum trick) in f32;
+projections run in the compute dtype.  SSM heads shard over the ``model``
+mesh axis (the TPU-native analogue of Mamba2's head parallelism); the state
+dim stays local so the scan carries no collectives.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instrument import op_hook
+from repro.dist.sharding import shard
+from .config import ModelConfig
+from .layers import rmsnorm
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, ds, nh, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 9)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dtype) * s,
+        "w_x": jax.random.normal(ks[1], (d, di), dtype) * s,
+        "w_B": jax.random.normal(ks[2], (d, g * ds), dtype) * s,
+        "w_C": jax.random.normal(ks[3], (d, g * ds), dtype) * s,
+        "w_dt": jax.random.normal(ks[4], (d, nh), dtype) * s,
+        "conv_x": jax.random.normal(ks[5], (w, di), dtype) * 0.1,
+        "conv_B": jax.random.normal(ks[6], (w, g * ds), dtype) * 0.1,
+        "conv_C": jax.random.normal(ks[7], (w, g * ds), dtype) * 0.1,
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "w_out": jax.random.normal(ks[8], (di, d), dtype) / math.sqrt(di),
+    }
+
+
+def mamba2_param_axes() -> dict:
+    return {
+        "w_z": ("p_embed", "p_ssm_inner"), "w_x": ("p_embed", "p_ssm_inner"),
+        "w_B": ("p_embed", None), "w_C": ("p_embed", None),
+        "w_dt": ("p_embed", "p_ssm_inner"),
+        "conv_x": (None, "p_ssm_inner"), "conv_B": (None, None),
+        "conv_C": (None, None),
+        "A_log": ("p_ssm_inner",), "dt_bias": ("p_ssm_inner",),
+        "D": ("p_ssm_inner",), "norm": ("p_ssm_inner",),
+        "w_out": ("p_ssm_inner", "p_embed"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv. x:(B,S,C), w:(W,C). Returns (y, new_state)
+    where state holds the trailing W-1 inputs for streaming decode."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    return jax.nn.silu(y), xp[:, -(width - 1):, :]
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) → L (..., Q, Q) with L[i,j]=exp(Σ_{k=j+1..i} dA) for j≤i."""
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    q = dA.shape[-1]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD over chunks.
+
+    x: (b,s,h,p) f32 | dt: (b,s,h) f32 | A: (h,) f32 (negative)
+    B,C: (b,s,h,n) f32 (group-broadcast done by caller)
+    Returns y (b,s,h,p) f32 and final state (b,h,p,n) f32.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, h, n)
+    Cc = C.reshape(b, nc, chunk, h, n)
+    dA = dtc * A[None, None, None, :]                     # (b,nc,q,h)
+    dA_h = dA.transpose(0, 1, 3, 2)                       # (b,nc,h,q)
+    cs = jnp.cumsum(dA_h, axis=-1)                        # (b,nc,h,q)
+    L = _segsum(dA_h)                                     # (b,nc,h,q,q)
+
+    # intra-chunk (the "attention-like" quadratic-in-Q term)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc)
+    scores = scores * L * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores, xc)
+
+    # per-chunk boundary states
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)             # (b,nc,h,q)
+    state_c = jnp.einsum("bchj,bcjh,bcjhn,bcjhp->bchpn",
+                         decay_to_end, dtc, Bc, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[..., -1])                    # (b,nc,h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(s_prev, inp):
+        st_c, dec = inp                                   # (b,h,p,n), (b,h)
+        s_new = s_prev * dec[..., None, None] + st_c
+        return s_new, s_prev
+
+    final_state, s_prevs = jax.lax.scan(
+        body, init_state,
+        (state_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)            # (b,nc,h,p,n)
+
+    in_decay = jnp.exp(cs)                                # (b,nc,h,q)
+    y_inter = jnp.einsum("bcihn,bchpn,bchi->bcihp", Cc, s_prevs, in_decay)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_ref(x, dt, A, B, C, init_state=None):
+    """Naive sequential recurrence oracle (tests)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    st = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None \
+        else init_state
+
+    def body(st, t):
+        xt, dtt, Bt, Ct = x[:, t], dt[:, t], B[:, t], C[:, t]
+        dec = jnp.exp(dtt * A[None, :])                  # (b,h)
+        st = st * dec[..., None, None] \
+            + jnp.einsum("bh,bhn,bhp->bhpn", dtt, Bt, xt)
+        yt = jnp.einsum("bhn,bhpn->bhp", Ct, st)
+        return st, yt
+
+    st, ys = jax.lax.scan(body, st, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), st
+
+
+def mamba2_layer(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: dict | None = None):
+    """x: (B,S,d_model). state (decode): {"conv_x","conv_B","conv_C","ssm"}."""
+    dt_ = x.dtype
+    b, s, _ = x.shape
+    nh, pd, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_))
+    Bv = jnp.einsum("bsd,de->bse", x, p["w_B"].astype(dt_))
+    Cv = jnp.einsum("bsd,de->bse", x, p["w_C"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_))
+    z = shard(z, "batch", "seq", "p_ssm_inner")
+    xs = shard(xs, "batch", "seq", "p_ssm_inner")
+
+    st = state or {}
+    xs, conv_x = _causal_conv(xs, p["conv_x"].astype(dt_), st.get("conv_x"))
+    Bv, conv_B = _causal_conv(Bv, p["conv_B"].astype(dt_), st.get("conv_B"))
+    Cv, conv_C = _causal_conv(Cv, p["conv_C"].astype(dt_), st.get("conv_C"))
+
+    A = -jnp.exp(p["A_log"])                              # (h,) negative
+    dt_act = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"][None, None, :])
+    xh = xs.reshape(b, s, nh, pd).astype(jnp.float32)
+    heads_per_group = nh // g
+    Bh = jnp.repeat(Bv.reshape(b, s, g, n), heads_per_group, axis=2)
+    Ch = jnp.repeat(Cv.reshape(b, s, g, n), heads_per_group, axis=2)
+    Bh = Bh.astype(jnp.float32)
+    Ch = Ch.astype(jnp.float32)
+
+    if state is None and s > 1:
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            # pad with dt=0 steps: decay exp(0)=1 and zero input, so the
+            # final state is exact; padded outputs are sliced off.
+            zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)]            # noqa: E731
+                                     + [(0, 0)] * (a.ndim - 2))
+            y, ssm = ssd_chunked(zpad(xh), zpad(dt_act), A, zpad(Bh),
+                                 zpad(Ch), chunk)
+            y = y[:, :s]
+        else:
+            y, ssm = ssd_chunked(xh, dt_act, A, Bh, Ch, chunk)
+    else:
+        y, ssm = ssd_ref(xh, dt_act, A, Bh, Ch, st.get("ssm"))
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(b, s, nh * pd).astype(dt_)
+    y = shard(y, "batch", "seq", "p_ssm_inner")
+
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.rmsnorm_eps)
+    op_hook("mamba.ssd", (xs, Bv, Cv, dt_raw), (y,))
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt_))
+    out = shard(out, "batch", "seq", "embed")
+    op_hook("mamba.out_proj", (y, p["w_out"]), (out,))
+    new_state = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "ssm": ssm}
+    return out, new_state

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts layer: sort-based capacity dispatch + block-diagonal
+expert matmuls.
+
+Dispatch avoids the classic (tokens × experts × capacity) one-hot einsum —
+whose FLOPs would swamp the real compute at 384 experts — in favour of a
+sort/scatter pipeline whose arithmetic cost is negligible and whose expert
+matmuls cost exactly ``2 · E · C · d · f`` = active-FLOPs × capacity factor:
+
+  1. router: softmax(x @ Wg) → top-k experts + gates per token;
+  2. stable argsort of the (T·k) expert assignments → contiguous groups;
+  3. rank-in-group via group starts (searchsorted); tokens past the per-
+     expert capacity C are dropped (standard capacity semantics);
+  4. scatter token rows into the (E, C, d) buffer; two batched einsums
+     (SwiGLU) over the expert dim; gather back; gate-weighted sum over k.
+
+Parallelism: expert *hidden* dim shards over the ``model`` axis (TP-MoE —
+routing stays local, no all-to-all; the classic EP all-to-all variant is a
+perf-loop alternative), experts' leading dim shards over ``data`` for ZeRO-3.
+Shared experts (Kimi-style) run densely for every token.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.instrument import op_hook
+from repro.dist.sharding import shard
+from .config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dtype) * s_out,
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["ws_gate"] = jax.random.normal(k1, (d, fs), dtype) * s_in
+        p["ws_up"] = jax.random.normal(k2, (d, fs), dtype) * s_in
+        p["ws_down"] = jax.random.normal(k3, (fs, d), dtype) * s_out
+    return p
+
+
+def moe_param_axes(cfg: ModelConfig) -> dict:
+    if cfg.moe_parallelism == "ep":
+        # experts over `model`, d_model over `data` (FSDP); hidden dim local
+        axes = {
+            "router": ("p_embed", None),
+            "w_gate": ("p_experts_ep", "p_embed", None),
+            "w_up": ("p_experts_ep", "p_embed", None),
+            "w_down": ("p_experts_ep", None, "p_embed"),
+        }
+    else:
+        axes = {
+            "router": ("p_embed", None),
+            "w_gate": ("p_experts", "p_embed", "p_expert_ff"),
+            "w_up": ("p_experts", "p_embed", "p_expert_ff"),
+            "w_down": ("p_experts", "p_expert_ff", "p_embed"),
+        }
+    if cfg.n_shared_experts:
+        axes.update({"ws_gate": ("p_embed", "p_expert_ff"),
+                     "ws_up": ("p_embed", "p_expert_ff"),
+                     "ws_down": ("p_expert_ff", "p_embed")})
+    return axes
+
+
+def _dispatch_group(xt, probs, k: int, e: int, cap: int, dt):
+    """Sort-based capacity dispatch for ONE token group (vmapped over the
+    data-parallel group dim so routing never crosses shards)."""
+    t = xt.shape[0]
+    gates, topk = jax.lax.top_k(probs, k)                  # (t,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    flat_e = topk.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)               # (t·k,)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=sorted_e.dtype))
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = rank < cap
+    slot = sorted_e.astype(jnp.int32) * cap + jnp.clip(rank, 0, cap - 1)
+    slot = jnp.where(keep, slot, e * cap)                  # overflow row
+    src = order // k                                       # source token copy
+    d = xt.shape[-1]
+    xe = jnp.zeros((e * cap + 1, d), dt).at[slot].set(
+        xt[src], mode="drop", unique_indices=False)
+    return xe[:e * cap].reshape(e, cap, d), (gates, order, slot, keep)
+
+
+def _combine_group(ye, gates, order, slot, keep, k: int, dt):
+    e, cap, d = ye.shape
+    t = gates.shape[0]
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
+                               jnp.zeros((1, d), dt)], axis=0)
+    y_copies = jnp.where(keep[:, None], ye_flat[slot], 0)  # (t·k, d)
+    y_sorted = jnp.zeros((t * k, d), dt).at[order].set(y_copies)
+    return (y_sorted.reshape(t, k, d) * gates.astype(dt)[..., None]).sum(1)
+
+
+def moe_layer(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B,S,d). Returns (y, aux) with load-balancing stats.
+
+    Tokens are reshaped to (G, t/G, d) with G = the data-parallel degree and
+    the group dim sharded over it, so dispatch (argsort/scatter) is local to
+    each data shard and expert matmuls carry exactly the active FLOPs ×
+    capacity factor per device.  Expert hidden dim shards over ``model``
+    (TP-MoE: no all-to-all; the EP all-to-all variant is a perf-loop
+    alternative — see repro.dist).
+    """
+    from repro.dist.sharding import mesh_axis_size
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_active
+    t = b * s
+    g = mesh_axis_size("pod") * mesh_axis_size("data")
+    while g > 1 and t % g:
+        g //= 2
+    tl = t // g
+    xt = x.reshape(g, tl, d)
+    xt = shard(xt, "batch", None, "embed")
+
+    # ---- router (f32) -----------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    cap = int(math.ceil(tl * k / e * cfg.capacity_factor))
+    cap = max(4, min(cap, tl))
+    xe, meta = jax.vmap(
+        lambda xg, pg: _dispatch_group(xg, pg, k, e, cap, dt))(xt, probs)
+    ep = cfg.moe_parallelism == "ep"
+    e_ax = "experts_ep" if ep else "experts"
+    f_ax = None if ep else "expert_ff"
+    # EP: this constraint is the token all-to-all (capacity rows redistribute
+    # from data-sharded groups to expert-sharded devices); TP: replicated
+    # expert dim, hidden dim sharded — no token movement.
+    xe = shard(xe, "batch", e_ax, None, "embed")           # (g,e,cap,d)
+
+    # ---- expert SwiGLU (block-diagonal over experts) ------------------------
+    gt = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+    gt = shard(gt, "batch", e_ax, None, f_ax)
+    u = shard(u, "batch", e_ax, None, f_ax)
+    h = jax.nn.silu(gt) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    ye = shard(ye, "batch", e_ax, None, "embed")
+    op_hook("moe.experts", (xe, p["w_gate"], p["w_up"], p["w_down"]), (ye,))
+
+    y = jax.vmap(lambda yg, m: _combine_group(yg, *m, k, dt))(ye, meta)
+
+    # ---- shared experts (dense) --------------------------------------------
+    if cfg.n_shared_experts:
+        sg = jnp.einsum("gtd,df->gtf", xt, p["ws_gate"].astype(dt))
+        su = jnp.einsum("gtd,df->gtf", xt, p["ws_up"].astype(dt))
+        sg = shard(sg, "batch", None, "expert_ff")
+        su = shard(su, "batch", None, "expert_ff")
+        y = y + jnp.einsum("gtf,fd->gtd", jax.nn.silu(sg) * su,
+                           p["ws_down"].astype(dt))
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                           # (e,)
+    _gates, _order, slot, keep = meta
+    flat_e = jnp.clip(slot // cap, 0, e - 1)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(
+        keep.reshape(-1).astype(jnp.float32)) / (t * k)
+    aux = {"lb_loss": e * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - keep.mean()}
+    y = y.reshape(b, s, d)
+    return shard(y, "batch", "seq", "embed"), aux

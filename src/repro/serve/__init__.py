@@ -1,0 +1,3 @@
+"""Serving substrate: KV/SSM cache management + batched engine."""
+
+from .engine import ServeEngine

@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill → decode with functional caches.
+
+The cache layout follows the dry-run cells: KV sequence dim shards over the
+``model`` mesh axis for long contexts (flash-decode with global softmax
+statistics, see models.layers._sdpa_decode); SSM archs carry O(1) recurrent
+state.  Prefill produces the cache directly from the chunked forward; decode
+is one jitted step per token with donated cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as pasta
+from repro.models import forward, init_cache
+from repro.models.config import ModelConfig
+
+
+def _pad_cache_to(cache: dict, cfg: ModelConfig, max_seq: int) -> dict:
+    """Grow the prefill KV cache's sequence dim to ``max_seq`` slots."""
+    if "kv" not in cache:
+        return cache
+    kv = cache["kv"]
+    cur = kv["k"].shape[2]
+    if cur >= max_seq:
+        return cache
+    pad = max_seq - cur
+
+    def grow(x):
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, pad)
+        return jnp.pad(x, widths)
+
+    cache = dict(cache)
+    cache["kv"] = {"k": grow(kv["k"]), "v": grow(kv["v"]),
+                   "length": kv["length"]}
+    return cache
+
+
+class ServeEngine:
+    """Greedy/temperature batched generation over the unified LM."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
+                 handler=None, rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.handler = handler or pasta.default_handler()
+        self._key = jax.random.PRNGKey(rng_seed)
+        self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg))
+        self._decode = jax.jit(functools.partial(self._decode_impl, cfg),
+                               donate_argnums=(1,))
+
+    @staticmethod
+    def _prefill_impl(cfg, params, tokens):
+        logits, cache = forward(params, tokens, cfg, return_cache=True,
+                                logits_mode="last")
+        return logits[:, -1, :], cache
+
+    @staticmethod
+    def _decode_impl(cfg, params, cache, tokens):
+        logits, cache = forward(params, tokens, cfg, cache=cache,
+                                logits_mode="last")
+        return logits[:, -1, :], cache
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(k, logits / temperature, axis=-1)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 16,
+                 temperature: float = 0.0) -> np.ndarray:
+        """prompts: (B, S) int32 (right-aligned, no padding support needed
+        for equal-length batches). Returns (B, max_new_tokens)."""
+        self.handler.operator_start("serve.prefill",
+                                    batch=int(prompts.shape[0]),
+                                    prompt_len=int(prompts.shape[1]))
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        cache = _pad_cache_to(cache, self.cfg, self.max_seq)
+        self.handler.operator_end("serve.prefill")
+        out = []
+        tok = self._sample(logits, temperature)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            self.handler.operator_start("serve.decode", step=i)
+            logits, cache = self._decode(self.params, cache, tok[:, None])
+            tok = self._sample(logits, temperature)
+            out.append(tok)
+            self.handler.operator_end("serve.decode")
+        return np.asarray(jnp.stack(out, axis=1))

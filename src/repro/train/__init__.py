@@ -1,0 +1,9 @@
+"""Training substrate: optimizer, trainer, data, checkpoint, elasticity."""
+
+from .optimizer import OptConfig, init_opt_state, adamw_update, lr_schedule
+from .trainer import (make_train_step, make_prefill_step, make_decode_step,
+                      train_shardings, serve_shardings, abstract_state,
+                      tree_shardings, batch_shardings)
+from .data import DataConfig, SyntheticTokens, FileTokens, make_source
+from . import checkpoint
+from .elastic import LoopConfig, TrainLoop

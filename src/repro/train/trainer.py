@@ -1,0 +1,176 @@
+"""Step builders + sharding plumbing shared by train.py and dryrun.py.
+
+``make_train_step`` builds a pjit-able function:
+
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+
+with microbatched gradient accumulation (``lax.scan`` over microbatches —
+one psum per accumulation window, the standard compute/comm-overlap layout),
+global-norm clipping and AdamW.  Sharding trees are produced from the model's
+logical param axes via :mod:`repro.dist.sharding`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import logical, set_mesh
+from repro.models import (forward, cross_entropy, init_params, param_axes,
+                          init_cache, cache_axes)
+from repro.models.config import ModelConfig
+from .optimizer import OptConfig, init_opt_state, opt_state_axes, adamw_update
+
+BATCH_AXES = ("pod", "data")
+
+
+# ---------------------------------------------------------------- shardings
+def tree_shardings(mesh, axes_tree, shapes_tree):
+    """NamedSharding tree from logical-axes tree + abstract shapes tree."""
+    from repro.dist.sharding import get_rules
+    set_mesh(mesh, get_rules())          # keep any custom rules in force
+
+    def one(ax, shape_leaf):
+        return NamedSharding(mesh, logical(*ax, dims=shape_leaf.shape))
+
+    is_ax = lambda x: isinstance(x, tuple)          # noqa: E731
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_ax)
+
+
+def _dp_axes(mesh, batch_size: int | None = None):
+    axes = tuple(a for a in BATCH_AXES if mesh.shape.get(a, 1) > 1)
+    if batch_size is not None:
+        while axes:
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if batch_size % n == 0:
+                break
+            axes = axes[:-1]          # drop innermost dp axis until it fits
+    return axes
+
+
+def batch_spec(mesh, batch_size: int | None = None):
+    return NamedSharding(mesh, P(_dp_axes(mesh, batch_size)))
+
+
+def batch_shardings(mesh, batch_tree):
+    def one(leaf):
+        return NamedSharding(mesh, P(_dp_axes(mesh, leaf.shape[0]),
+                                     *([None] * (leaf.ndim - 1))))
+    return jax.tree.map(one, batch_tree)
+
+
+def abstract_state(cfg: ModelConfig, opt_cfg: OptConfig | None = None):
+    """eval_shape of params (and optimizer state) — no allocation, works for
+    the 1T-param config."""
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if opt_cfg is None:
+        return params, None
+    opt = jax.eval_shape(lambda: init_opt_state(params, opt_cfg))
+    return params, opt
+
+
+# --------------------------------------------------------------- train step
+def _gather_once(params, cfg: ModelConfig):
+    """ZeRO-2-style hoist: re-constrain params with the FSDP ('data') axis
+    dropped so the all-gather happens once per step, before the microbatch
+    loop — its transpose (one reduce-scatter of the summed grads) lands
+    after the loop.  Trades (params/model-shard) bytes of HBM for
+    (microbatches-1)/microbatches of the FSDP collective traffic."""
+    from repro.dist.sharding import get_mesh, logical
+    mesh = get_mesh()
+    if mesh is None:
+        return params
+    axes = param_axes(cfg)
+    is_ax = lambda x: isinstance(x, tuple)          # noqa: E731
+
+    def regather(ax, p):
+        ax2 = tuple(None if a == "p_embed" else a for a in ax)
+        sh = NamedSharding(mesh, logical(*ax2, dims=p.shape))
+        return jax.lax.with_sharding_constraint(p, sh)
+
+    return jax.tree.map(regather, axes, params, is_leaf=is_ax)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    microbatches: int = 1):
+    def loss_fn(params, inputs, labels):
+        logits, _ = forward(params, inputs, cfg)
+        loss, parts = cross_entropy(logits, labels)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        inputs, labels = batch["inputs"], batch["labels"]
+        if cfg.gather_params_once and microbatches > 1:
+            params = _gather_once(params, cfg)
+        if microbatches == 1:
+            (loss, _parts), grads = grad_fn(params, inputs, labels)
+        else:
+            m = microbatches
+            b = inputs.shape[0]
+            assert b % m == 0, (b, m)
+            mb_in = inputs.reshape(m, b // m, *inputs.shape[1:])
+            mb_lb = labels.reshape(m, b // m, *labels.shape[1:])
+
+            def micro(carry, mb):
+                acc, lsum = carry
+                (l, _p), g = grad_fn(params, mb["i"], mb["l"])
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)),
+                {"i": mb_in, "l": mb_lb})
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = lsum / m
+        new_params, new_opt, om = adamw_update(params, grads, opt_state,
+                                               opt_cfg)
+        metrics = {"loss": loss, **om,
+                   "tokens": jnp.asarray(inputs.shape[0] * inputs.shape[1],
+                                         jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_shardings(mesh, cfg: ModelConfig, opt_cfg: OptConfig):
+    """(param_shardings, opt_shardings) matching abstract_state."""
+    p_shapes, o_shapes = abstract_state(cfg, opt_cfg)
+    p_ax = param_axes(cfg)
+    p_sh = tree_shardings(mesh, p_ax, p_shapes)
+    o_ax = opt_state_axes(p_ax, opt_cfg)
+    o_sh = tree_shardings(mesh, o_ax, o_shapes)
+    return p_sh, o_sh, p_shapes, o_shapes
+
+
+# --------------------------------------------------------------- serve step
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, inputs):
+        logits, cache = forward(params, inputs, cfg, return_cache=True,
+                                logits_mode="last")
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, tokens):
+        logits, new_cache = forward(params, tokens, cfg, cache=cache,
+                                    logits_mode="last")
+        return logits, new_cache
+    return decode_step
+
+
+def serve_shardings(mesh, cfg: ModelConfig, batch: int, max_seq: int):
+    params_shapes, _ = abstract_state(cfg)
+    p_sh = tree_shardings(mesh, param_axes(cfg), params_shapes)
+    cache_shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq))
+    c_sh = tree_shardings(mesh, cache_axes(cfg), cache_shapes)
+    return p_sh, c_sh, params_shapes, cache_shapes

@@ -1,0 +1,19 @@
+"""Test fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see the real single CPU device; multi-device distribution tests
+spawn subprocesses that set XLA_FLAGS themselves (see test_dist.py)."""
+
+import numpy as np
+import pytest
+
+import repro.core as pasta
+
+
+@pytest.fixture()
+def handler():
+    """Fresh process-global handler per test (tools subscribe to it)."""
+    return pasta.attach()
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,100 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp oracles, in
+interpret mode (the kernel body executes on CPU exactly as written for TPU).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+from repro.kernels import ops, ref  # noqa: E402
+from repro.kernels.trace_aggregate import object_histogram_pallas  # noqa: E402
+from repro.kernels.hotness import hotness_histogram_pallas  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def _mk_objects(rng, k, max_size=4 << 20):
+    sizes = rng.integers(512, max_size, size=k) // 512 * 512
+    starts = np.zeros(k, dtype=np.int64)
+    addr = 2 << 20
+    for i in range(k):
+        starts[i] = addr
+        addr += sizes[i] + (2 << 20)
+    return starts, starts + sizes
+
+
+@pytest.mark.parametrize("n,k", [(100, 3), (5000, 17), (65536, 512),
+                                 (10000, 1000), (3, 1)])
+def test_object_histogram_matches_oracle(rng, n, k):
+    starts, ends = _mk_objects(rng, k)
+    hits = rng.integers(0, k, size=n)
+    addrs = starts[hits] + rng.integers(0, (ends - starts)[hits])
+    # sprinkle misses
+    addrs[:: max(n // 10, 1)] = ends[-1] + 12345
+    got = ops.object_histogram(addrs, starts, ends)
+    os.environ["REPRO_PALLAS_INTERPRET"] = "0"
+    want = ops.object_histogram(addrs, starts, ends)
+    os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() <= n
+
+
+@pytest.mark.parametrize("dtype", [np.int64, np.int32])
+def test_object_histogram_exact_counts(rng, dtype):
+    starts = np.array([2 << 20, 8 << 20, 32 << 20], dtype=np.int64)
+    ends = starts + np.array([1 << 20, 2 << 20, 512], dtype=np.int64)
+    addrs = np.concatenate([
+        rng.integers(starts[0], ends[0], 700),
+        rng.integers(starts[1], ends[1], 300),
+        np.full(5, starts[2]),
+    ]).astype(dtype)
+    got = ops.object_histogram(addrs, starts, ends)
+    np.testing.assert_array_equal(got, [700, 300, 5])
+
+
+@pytest.mark.parametrize("n,nb,tb", [(100, 32, 8), (4096, 512, 64),
+                                     (20000, 1024, 16), (7, 512, 4)])
+def test_hotness_matches_oracle(rng, n, nb, tb):
+    base = 2 << 20
+    addrs = base + rng.integers(0, nb * (2 << 20), size=n)
+    times = rng.random(n)
+    got = ops.hotness_histogram(addrs, times, base, nb, tb, 1.0)
+    os.environ["REPRO_PALLAS_INTERPRET"] = "0"
+    want = ops.hotness_histogram(addrs, times, base, nb, tb, 1.0)
+    os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == n          # all in range -> conservation
+
+
+def test_hotness_out_of_range_dropped(rng):
+    base = 2 << 20
+    addrs = np.array([base - 4096, base + 100 * (2 << 20)], dtype=np.int64)
+    got = ops.hotness_histogram(addrs, np.array([0.1, 0.2]), base, 8, 4, 1.0)
+    assert got.sum() == 0
+
+
+def test_pallas_padding_invariance(rng):
+    """Counts must not change when N is not a tile multiple (padding path)."""
+    starts, ends = _mk_objects(rng, 5)
+    for n in (1, 2047, 2048, 2049, 4097):
+        addrs = starts[rng.integers(0, 5, n)] + 256
+        got = ops.object_histogram(addrs, starts, ends)
+        assert got.sum() == n
+
+
+def test_pallas_direct_call_shapes(rng):
+    """Direct pallas_call with exact tile shapes (interpret)."""
+    a = jnp.asarray(rng.integers(0, 10_000, 4096).astype(np.int32))
+    s = jnp.asarray((np.arange(512) * 32).astype(np.int32))
+    e = s + 16
+    out = object_histogram_pallas(a, s, e, interpret=True)
+    assert out.shape == (512,)
+    oracle = np.asarray(ref.object_histogram_ref(a, s, e))
+    np.testing.assert_array_equal(np.asarray(out).astype(np.int64), oracle)
+
+    tb = jnp.asarray(rng.integers(0, 4, 1024).astype(np.int32))
+    h = hotness_histogram_pallas(a[:1024], tb, 0, 512, 4, 12, interpret=True)
+    assert h.shape == (4, 512)

@@ -1,0 +1,144 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as pasta
+from repro.core.pool import MemoryPool, TENSOR_ROUND
+from repro.kernels import ops
+from repro.train.optimizer import _quant, _dequant
+from repro.dist.collectives import quantize_int8, dequantize_int8
+
+jax.config.update("jax_platforms", "cpu")
+
+
+# ---------------------------------------------------------------- allocator
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 1 << 22), st.booleans()),
+                min_size=1, max_size=60))
+def test_pool_invariants(ops_list):
+    """No two live tensors overlap; every tensor sits inside its object;
+    live-byte accounting is exact."""
+    pool = MemoryPool(pasta.EventHandler(), chunk_size=1 << 20)
+    live = []
+    for size, do_free in ops_list:
+        t = pool.alloc(size)
+        live.append(t)
+        if do_free and live:
+            victim = live.pop(0)
+            pool.free(victim)
+        # invariants
+        lt = sorted(pool.live_tensors(), key=lambda x: x.addr)
+        for a, b in zip(lt, lt[1:]):
+            assert a.addr + a.size <= b.addr, "overlap"
+        for t2 in lt:
+            o = pool.objects[t2.object_id]
+            assert o.base <= t2.addr and t2.addr + t2.size <= o.base + o.size
+        assert pool.live_bytes == sum(t2.size for t2 in lt)
+        assert pool.live_bytes <= pool.footprint
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 1 << 20))
+def test_pool_rounding(nbytes):
+    pool = MemoryPool(pasta.EventHandler())
+    t = pool.alloc(nbytes)
+    assert t.size % TENSOR_ROUND == 0 and t.size >= nbytes
+
+
+# -------------------------------------------------------------- histograms
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4000), st.integers(1, 40), st.integers(0, 2 ** 31))
+def test_histogram_conservation(n, k, seed):
+    """Σ counts == #records-in-range, for any object layout."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(512, 1 << 20, size=k) // 512 * 512
+    starts = np.cumsum(np.concatenate([[2 << 20], sizes[:-1] + (2 << 20)]))
+    ends = starts + sizes
+    addrs = rng.integers(0, ends[-1] + (4 << 20), size=n)
+    counts = ops.object_histogram(addrs, starts, ends)
+    in_range = sum(int(((addrs >= s) & (addrs < e)).sum())
+                   for s, e in zip(starts, ends))
+    assert counts.sum() == in_range
+    assert (counts >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 3000), st.integers(1, 16), st.integers(1, 64),
+       st.integers(0, 2 ** 31))
+def test_hotness_conservation(n, tb, nb, seed):
+    rng = np.random.default_rng(seed)
+    base = 2 << 20
+    addrs = base + rng.integers(0, nb * (2 << 20), size=n)
+    times = rng.random(n)
+    hot = ops.hotness_histogram(addrs, times, base, nb, tb, 1.0)
+    assert hot.shape == (tb, nb)
+    assert hot.sum() == n
+
+
+# ------------------------------------------------------------ quantization
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 128), st.integers(0, 2 ** 31),
+       st.floats(1e-4, 1e4))
+def test_int8_moment_quantization_error_bound(rows, cols, seed, scale):
+    """Per-row absmax int8: |x - deq(q)| <= amax_row / 127 (half-ulp ~ /254,
+    use /126 slack for rounding)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, cols)) * scale, jnp.float32)
+    q, s = _quant(x)
+    back = _dequant(q, s)
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    assert np.all(np.abs(np.asarray(back - x)) <= amax / 126.0 + 1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 64), st.integers(0, 2 ** 31))
+def test_compressed_gradient_roundtrip_relative_error(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, cols)), jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s)
+    rel = float(jnp.linalg.norm(back - x) / (jnp.linalg.norm(x) + 1e-9))
+    assert rel < 0.01                           # <1% relative error
+
+
+# ------------------------------------------------------------ event stream
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(["a", "b", "c"]), max_size=8))
+def test_nested_regions_always_balance(names):
+    h = pasta.attach()
+    evs = []
+    h.subscribe(lambda e: evs.append(e), kinds=("region_start", "region_end"))
+    for n in names:
+        pasta.start(n)
+    for n in reversed(names):
+        pasta.end(n)
+    assert pasta.current_region() == ()
+    starts = [e for e in evs if e.kind.value == "region_start"]
+    ends = [e for e in evs if e.kind.value == "region_end"]
+    assert len(starts) == len(ends) == len(names)
+
+
+# ------------------------------------------------------------- checkpoints
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31))
+def test_checkpoint_roundtrip(seed):
+    import tempfile
+    from repro.train import checkpoint as ckpt
+    rng = np.random.default_rng(seed)
+    state = {"params": {"w": jnp.asarray(rng.standard_normal((4, 8)),
+                                         jnp.float32),
+                        "b": jnp.asarray(rng.standard_normal(8),
+                                         jnp.float32)},
+             "opt": {"mu": {"w": jnp.zeros((4, 8)), "b": jnp.ones(8)},
+                     "step": jnp.asarray(7)}}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 42, state)
+        assert ckpt.latest_step(d) == 42
+        step, back = ckpt.restore(d, state)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
