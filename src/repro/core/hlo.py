@@ -223,10 +223,15 @@ def parse_hlo(text: str) -> HloModule:
                 tok += ch
         if tok.strip():
             operands.append(tok.strip())
-        # operand tokens are usually plain %names; keep the name part
+        # operand tokens are either plain %names or "<shape> %name" (compiled
+        # HLO prints inline operand shapes); keep the name part — dropping the
+        # shape here is what lets dot/fusion costs resolve their operand
+        # shapes (and hence contraction dims) through while-body computations
         op_names = []
         for o in operands:
             mm = re.match(r"^%?([\w\.\-]+)$", o)
+            if mm is None:
+                mm = re.search(r"%([\w\.\-]+)\s*$", o)
             op_names.append(mm.group(1) if mm else o)
         ins = Instruction(name, opcode, shape, op_names, attrs.strip(", "),
                           is_root=is_root)

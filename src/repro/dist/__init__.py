@@ -1,0 +1,39 @@
+"""``repro.dist`` — the distribution subsystem.
+
+Three orthogonal layers, consumed by models / trainer / serving / dry-run:
+
+``sharding``
+    Logical-axis rule table + process-global mesh registry.  Model code
+    annotates tensors with logical names ("p_embed", "seq_sp",
+    "expert_ff", ...); :data:`~repro.dist.sharding.DEFAULT_RULES` maps them
+    to physical mesh axes (FSDP "data" × TP "model", optional "pod"),
+    :func:`~repro.dist.sharding.logical` resolves an annotation into a
+    ``PartitionSpec`` (dropping absent / size-1 / non-dividing / duplicate
+    axes), and :func:`~repro.dist.sharding.shard` applies it as a GSPMD
+    constraint — a no-op without a registered mesh.
+
+``collectives``
+    int8-compressed cross-pod gradient sync: ``quantize_int8`` /
+    ``dequantize_int8``, ``plain_psum`` / ``compressed_psum``, and
+    ``make_pod_sync(mesh, compressed=)`` over the "pod" axis.
+
+``pipeline``
+    GPipe-style microbatch pipeline parallelism over a "pipe" axis
+    (``shard_map`` + ``lax.ppermute`` ring; differentiable; numerics match
+    sequential execution).
+"""
+
+from . import collectives, pipeline, sharding
+from .collectives import (compressed_psum, dequantize_int8, make_pod_sync,
+                          plain_psum, quantize_int8)
+from .pipeline import make_pipelined_fn
+from .sharding import (DEFAULT_RULES, ShardingRules, get_mesh, get_rules,
+                       logical, mesh_axis_size, set_mesh, shard)
+
+__all__ = [
+    "collectives", "pipeline", "sharding",
+    "DEFAULT_RULES", "ShardingRules", "get_mesh", "get_rules", "logical",
+    "mesh_axis_size", "set_mesh", "shard",
+    "quantize_int8", "dequantize_int8", "plain_psum", "compressed_psum",
+    "make_pod_sync", "make_pipelined_fn",
+]

@@ -1,0 +1,103 @@
+"""Compressed cross-pod collectives.
+
+Cross-pod gradient sync is the one collective that crosses the slow
+inter-pod links, so it gets a compressed variant: each participant
+quantizes its local tensor to int8 with per-row (last-axis) absmax scales,
+the int8 payload + f32 scales move over the wire (~4× fewer bytes than an
+f32 all-reduce), and the sum is taken after dequantization.  Relative
+error for gradient-like (zero-mean) tensors is <1% (property-tested).
+
+``plain_psum`` / ``compressed_psum`` are collective primitives usable
+inside any ``shard_map``; :func:`make_pod_sync` wraps them into a
+pytree-level gradient synchronizer over the ``"pod"`` mesh axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+# ------------------------------------------------------------- quantization
+def quantize_int8(x):
+    """Symmetric int8 with per-row (last-axis) absmax scales.
+
+    Returns ``(q, scale)`` with ``q`` int8 of ``x``'s shape and ``scale``
+    f32 of shape ``(*x.shape[:-1], 1)`` — shapes (hence shardings) of the
+    original tensor are preserved.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# -------------------------------------------------------------- collectives
+def plain_psum(x, axis_name: str):
+    """Uncompressed all-reduce over ``axis_name`` (baseline)."""
+    return jax.lax.psum(x, axis_name)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-compressed all-reduce over ``axis_name``.
+
+    quantize → all-gather the (int8, scale) pairs → dequantize → local sum.
+    Only the quantized payload crosses the interconnect; the result matches
+    :func:`plain_psum` within quantization error (<1% relative).
+
+    NOTE: all-gather wire bytes grow with the axis size N — the ~4× saving
+    over an f32 ring all-reduce holds for the 2-pod production mesh this
+    targets and erodes to parity by N≈8.  Scaling past 2 pods needs the
+    quantized reduce-scatter layout (see ROADMAP "Multi-pod meshes").
+    """
+    squeeze = x.ndim == 0
+    if squeeze:
+        x = x.reshape(1)
+    q, s = quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis_name)
+    sg = jax.lax.all_gather(s, axis_name)
+    out = jnp.sum(dequantize_int8(qg, sg), axis=0).astype(x.dtype)
+    return out[0] if squeeze else out
+
+
+def make_pod_sync(mesh, compressed: bool = False, axis: str = "pod",
+                  specs=None):
+    """Cross-pod gradient synchronizer: pytree → pytree, psum over ``axis``.
+
+    Float leaves are all-reduced over the pod axis (int8-compressed when
+    ``compressed=True``); non-float leaves (step counters, ...) pass
+    through.  Identity when the mesh has no pod axis.
+
+    ``specs`` is an optional pytree of ``PartitionSpec`` (matching the
+    gradient tree) describing how leaves are sharded over the non-pod
+    axes; supply it for FSDP/TP-sharded gradients so each device syncs
+    only its shard.  The default ``P()`` treats leaves as replicated —
+    fine for small trees, but it forces a full all-gather of sharded
+    gradients first.
+    """
+    if axis not in mesh.axis_names or mesh.shape[axis] == 1:
+        return lambda grads: grads
+    op = compressed_psum if compressed else plain_psum
+
+    def sync_one(g):
+        if not jnp.issubdtype(g.dtype, jnp.floating):
+            return g
+        return op(g, axis)
+
+    def sync(grads):
+        leaves, treedef = jax.tree.flatten(grads)
+        in_specs = specs if specs is not None \
+            else treedef.unflatten([P()] * len(leaves))
+        f = shard_map(lambda tr: jax.tree.map(sync_one, tr), mesh=mesh,
+                      in_specs=(in_specs,), out_specs=in_specs,
+                      check_rep=False)
+        return f(grads)
+
+    return sync

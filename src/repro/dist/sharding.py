@@ -1,0 +1,170 @@
+"""Logical-axis sharding: process-global mesh registry + rule table.
+
+Model code never names physical mesh axes.  Parameters, caches and
+activations are annotated with *logical* axis names ("p_embed", "seq_sp",
+"expert_ff", ...) and a :class:`ShardingRules` table maps each logical name
+to a physical mesh axis (or a tuple of axes, or ``None`` for replicated).
+``logical(*axes, dims=...)`` resolves one annotation tuple into a
+``PartitionSpec``; ``shard(x, *axes)`` applies it as a GSPMD sharding
+constraint (a no-op when no mesh is registered, so single-device smoke
+tests run the exact same model code).
+
+Resolution rules (what makes the table safe to apply blindly):
+
+  * physical axes absent from the current mesh — or of size 1 — are dropped
+    (the same model runs on ``("data","model")``, ``("pod","data","model")``
+    and ``("pipe","data")`` meshes);
+  * a physical axis may appear in at most one dimension of a spec; the
+    first (leftmost) logical axis that claims it wins, later claims
+    resolve to ``None`` (e.g. MoE expert weights: "p_experts" takes the
+    ZeRO "data" axis, so "p_embed" in the same tensor stays local);
+  * when ``dims`` is given, a physical axis that does not evenly divide its
+    dimension is dropped (reduced smoke configs have e.g. 1 KV head —
+    ``device_put`` would reject a 4-way sharding of it).
+
+Defaults implement the standard FSDP("data") × TP("model") layout with an
+optional leading "pod" data-parallel axis and sequence-parallel KV caches
+("seq_sp" → "model", the flash-decode layout in models.layers).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class ShardingRules(dict):
+    """Mapping from logical axis name to physical mesh axis/axes.
+
+    Values are a mesh axis name, a tuple of names (the dimension shards over
+    their product, major first), or ``None`` (replicated).  Plain-``dict``
+    semantics so call sites can patch with ``{**DEFAULT_RULES, ...}``.
+    """
+
+    def physical(self, name):
+        if name is None:
+            return None
+        try:
+            return self[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown logical axis {name!r}; known: {sorted(self)}"
+            ) from None
+
+
+DEFAULT_RULES = ShardingRules({
+    # ---- parameters --------------------------------------------------------
+    "p_layers": None,             # scan-stacked layer dim stays local
+    "p_vocab": "model",
+    "p_embed": "data",            # FSDP / ZeRO-3 axis
+    "p_heads": "model",
+    "p_kv_heads": "model",
+    "p_ff": "model",
+    "p_experts": "data",          # TP-MoE: expert dim ZeRO-shards over data
+    "p_experts_ep": "model",      # EP-MoE: experts over model
+    "p_expert_ff": "model",
+    "p_ssm_inner": "model",       # Mamba2 head parallelism
+    # ---- activations / caches ---------------------------------------------
+    "batch": ("pod", "data"),
+    "seq": None,                  # no SP for training activations
+    "seq_sp": "model",            # KV-cache sequence dim (flash-decode SP)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "embed": None,                # replicated between-layer activations
+    "ff": "model",
+    "vocab": "model",
+    "experts": None,              # TP-MoE: token buffer stays data-local
+    "experts_ep": "model",        # EP-MoE: the token all-to-all
+    "expert_ff": "model",
+    "ssm_heads": "model",
+})
+
+_MESH = None
+_RULES: ShardingRules = DEFAULT_RULES
+
+
+def set_mesh(mesh, rules: ShardingRules | None = None) -> None:
+    """Register the process-global mesh (``None`` disables sharding hints).
+
+    ``rules=None`` resets to :data:`DEFAULT_RULES`; pass
+    ``set_mesh(mesh, get_rules())`` to keep a custom table in force.
+    """
+    global _MESH, _RULES
+    _MESH = mesh
+    _RULES = ShardingRules(rules) if rules is not None else DEFAULT_RULES
+
+
+def get_mesh():
+    return _MESH
+
+
+def get_rules() -> ShardingRules:
+    return _RULES
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis; 1 when no mesh is set or the axis is absent."""
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get(name, 1))
+
+
+def logical(*axes, dims=None, rules: ShardingRules | None = None,
+            mesh=None) -> P:
+    """Resolve a tuple of logical axis names into a ``PartitionSpec``.
+
+    ``dims`` (the tensor shape) enables the divisibility filter; ``rules``
+    and ``mesh`` default to the registered globals.
+    """
+    rules = rules if rules is not None else get_rules()
+    mesh = mesh if mesh is not None else get_mesh()
+    if dims is not None and len(dims) != len(axes):
+        raise ValueError(f"rank mismatch: {len(axes)} logical axes for "
+                         f"shape {tuple(dims)}")
+    used: set = set()
+    spec = []
+    for i, name in enumerate(axes):
+        phys = rules.physical(name)
+        if phys is None:
+            spec.append(None)
+            continue
+        cands = (phys,) if isinstance(phys, str) else tuple(phys)
+        kept = []
+        prod = 1
+        for a in cands:
+            if a in used:
+                continue
+            if mesh is not None:
+                size = dict(mesh.shape).get(a)
+                if size is None or size == 1:
+                    continue
+                if dims is not None and dims[i] % (prod * size):
+                    continue
+                prod *= size
+            kept.append(a)
+            used.add(a)
+        if not kept:
+            spec.append(None)
+        elif len(kept) == 1:
+            spec.append(kept[0])
+        else:
+            spec.append(tuple(kept))
+    return P(*spec)
+
+
+def shard(x, *axes):
+    """Sharding-constraint hint: constrain ``x`` to ``logical(*axes)``.
+
+    No-op when no mesh is registered or when the annotation rank does not
+    match ``x`` (callers annotate the common layout; reshaped variants pass
+    through unconstrained rather than erroring).
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    if len(axes) != getattr(x, "ndim", -1):
+        return x
+    spec = logical(*axes, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
