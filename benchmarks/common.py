@@ -65,4 +65,6 @@ def instrumented_inference(arch: str, batch=2, seq=64, fine=True,
             with pasta.region(f"step{s}"):
                 logits, _ = forward(params, x, cfg)
             handler.step_end(s)
-    return handler, proc, inst, proc.finalize()
+    reports = proc.finalize()
+    proc.close()          # detach from the (process-global) handler
+    return handler, proc, inst, reports

@@ -42,6 +42,7 @@ def main() -> list:
             logits, _ = forward(params, x, cfg)
             loss, _ = cross_entropy(logits, labels)
     eager = proc.finalize()["MemoryTimelineTool"]
+    proc.close()
     dev = eager["devices"][0]
     e_series = [b for _s, b, _r in eager["series"][dev]]
 

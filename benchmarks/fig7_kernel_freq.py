@@ -58,6 +58,7 @@ def main() -> list:
                                      default_trip=cfg.n_layers, steps=100)
         capture_us = (time.perf_counter() - t0) * 1e6
         rep = proc.finalize()["KernelFrequencyTool"]
+        proc.close()
         total = rep["total_invocations"]
         top5 = sum(c for _n, c in rep["top"][:5])
         report[arch] = {"total": total, "distinct": rep["distinct_kernels"],

@@ -1,4 +1,5 @@
-"""Paper Fig. 9 — analysis overhead: device-resident vs host-resident.
+"""Paper Fig. 9 — analysis overhead: device-resident vs host-resident, plus
+the coarse-grained dispatch sweep for the columnar event backbone.
 
 The paper's headline result: GPU-resident collect-and-analyze is 627×–13006×
 faster than conventional trace-to-CPU single-thread analysis.  Here the same
@@ -10,10 +11,20 @@ working-set analysis runs over identical access-record buffers through:
     (XLA-compiled oracle on CPU here; the Pallas TPU kernel is the
     hardware-target form, validated in interpret mode by the tests).
 
+``coarse_dispatch`` applies the same comparison to the coarse-grained tier
+itself: one Python ``Event`` per occurrence through per-callback dispatch
+(scalar ``emit``, the Compute-Sanitizer-style host-resident model) vs SoA
+``EventBatch`` emission through the vectorized normalize/dispatch spine.
+Reports events/sec for both and asserts the ≥10× acceptance bar at 10⁶
+events (reports must also be byte-identical — checked every run).
+
 Sweeps trace volume; reports per-record cost and the speedup.
 """
 
 from __future__ import annotations
+
+import sys
+import time
 
 import numpy as np
 
@@ -21,7 +32,14 @@ from repro.core.processor import analyze_access_trace
 from .common import row, save, timeit
 
 SIZES = (100_000, 300_000, 1_000_000, 3_000_000, 10_000_000)
+SMOKE_SIZES = (100_000,)
+DISPATCH_SIZES = (1_000, 10_000, 100_000, 1_000_000)
+# smoke keeps the expensive host-trace sweep at 100k, but the dispatch sweep
+# still includes 1e6 so the ≥10× acceptance assert actually executes in CI
+SMOKE_DISPATCH_SIZES = (1_000, 1_000_000)
 N_OBJECTS = 512
+N_KERNELS = 64
+EMIT_CHUNK = 65_536
 
 
 def _mk(rng, n):
@@ -33,11 +51,11 @@ def _mk(rng, n):
     return addrs, list(zip(starts, ends))
 
 
-def main() -> list:
+def trace_analysis(sizes=SIZES) -> tuple:
     rng = np.random.default_rng(0)
     rows = []
     report = {}
-    for n in SIZES:
+    for n in sizes:
         addrs, objs = _mk(rng, n)
         (c_dev, _), t_dev = timeit(analyze_access_trace, addrs, objs,
                                    mode="device", repeat=3)
@@ -51,9 +69,73 @@ def main() -> list:
         rows.append(row(f"fig9_overhead[n={n}]", t_dev / n * 1e6,
                         f"host_s={t_host:.3f};device_s={t_dev:.4f};"
                         f"speedup={speedup:.0f}x"))
-    save("fig9_overhead", report)
+    return rows, report
+
+
+def coarse_dispatch(sizes=DISPATCH_SIZES) -> tuple:
+    """Events/sec: scalar ``emit`` vs columnar ``emit_batch`` feeding the
+    same vectorized tool stack; finalize() reports must match exactly."""
+    import repro.core as pasta
+    from repro.core.events import Event, EventBatch, EventKind, reset_seq
+
+    names = [f"fusion.{i}" for i in range(N_KERNELS)]
+    rows = []
+    report = {}
+    for n in sizes:
+        name_ids = (np.arange(n, dtype=np.int32) % N_KERNELS).astype(np.int32)
+        # --- scalar: one Event object + per-callback dispatch per launch --
+        reset_seq()
+        handler = pasta.EventHandler()
+        with pasta.EventProcessor(
+                handler, tools=[pasta.KernelFrequencyTool()]) as proc:
+            t0 = time.perf_counter()
+            for i in range(n):
+                handler.emit(Event(EventKind.KERNEL_LAUNCH,
+                                   name=names[i % N_KERNELS]))
+            t_scalar = time.perf_counter() - t0
+            rep_scalar = proc.finalize()
+        # --- batched: SoA chunks through the columnar spine ---------------
+        reset_seq()
+        handler = pasta.EventHandler()
+        with pasta.EventProcessor(
+                handler, tools=[pasta.KernelFrequencyTool()]) as proc:
+            t0 = time.perf_counter()
+            for lo in range(0, n, EMIT_CHUNK):
+                ids = name_ids[lo:lo + EMIT_CHUNK]
+                handler.emit_batch(EventBatch.of(
+                    EventKind.KERNEL_LAUNCH, name_ids=ids,
+                    name_table=names))
+            t_batch = time.perf_counter() - t0
+            rep_batch = proc.finalize()
+        assert rep_batch == rep_scalar, "batched report diverged from scalar"
+        speedup = t_scalar / t_batch
+        report[n] = {
+            "scalar_s": t_scalar, "batched_s": t_batch,
+            "scalar_events_per_s": n / t_scalar,
+            "batched_events_per_s": n / t_batch,
+            "speedup": speedup,
+        }
+        rows.append(row(
+            f"fig9_coarse_dispatch[n={n}]", t_batch / n * 1e6,
+            f"scalar_evps={n / t_scalar:.0f};"
+            f"batched_evps={n / t_batch:.0f};speedup={speedup:.1f}x"))
+        if n >= 1_000_000:
+            assert speedup >= 10.0, (
+                f"batched dispatch only {speedup:.1f}x at n={n}")
+    return rows, report
+
+
+def main(sizes=SIZES, dispatch_sizes=DISPATCH_SIZES) -> list:
+    rows, trace_report = trace_analysis(sizes)
+    d_rows, dispatch_report = coarse_dispatch(dispatch_sizes)
+    rows += d_rows
+    payload = dict(trace_report)
+    payload["coarse_dispatch"] = dispatch_report
+    save("fig9_overhead", payload)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    smoke = "--smoke" in sys.argv
+    main(sizes=SMOKE_SIZES if smoke else SIZES,
+         dispatch_sizes=SMOKE_DISPATCH_SIZES if smoke else DISPATCH_SIZES)

@@ -73,6 +73,7 @@ def main():
             handler.step_end(s)
 
     reports = proc.finalize()
+    proc.close()              # detach from the process-global handler
     print(f"== {args.arch} characterization ==")
     w = reports["WorkingSetTool"]
     print(f"working set: max={w['working_set_mb']:.2f}MB "

@@ -29,8 +29,9 @@ def main():
     labels = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
 
     # 1) eager instrumented pass: framework-level events (operators, tensor
-    #    lifetimes, fine-grained access traces reduced on device)
-    with EagerInstrumenter(handler, fine=True):
+    #    lifetimes, fine-grained access traces reduced on device); buffered=
+    #    True batches them through the SoA ring (flushed at step edges)
+    with EagerInstrumenter(handler, fine=True, buffered=True):
         with pasta.region("forward"):              # paper Listing 1 style
             logits, _ = forward(params, x, cfg)
 
@@ -57,6 +58,7 @@ def main():
             print(f"{name}: peak={rep['peak_bytes'][d]}B "
                   f"allocs={rep['alloc_events'][d]} "
                   f"frees={rep['free_events'][d]}")
+    proc.close()              # detach from the process-global handler
 
 
 if __name__ == "__main__":

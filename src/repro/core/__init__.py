@@ -10,24 +10,27 @@ Public surface (``import repro.core as pasta``):
 """
 
 from .annotate import start, end, region, GridIdFilter, current_region
-from .events import Event, EventKind, COLLECTIVE_OPCODES
+from .events import (Event, EventBatch, EventKind, EventRing,
+                     COLLECTIVE_OPCODES, take_seqs)
 from .handler import EventHandler, attach, default_handler
 from .pool import MemoryPool, MemoryObject, TensorHandle, CHUNK_ALIGN
 from .processor import (EventProcessor, analyze_access_trace,
-                        analyze_hotness_trace)
+                        analyze_hotness_trace, analyze_trace_fused)
 from . import hlo
 from . import tools
 from .tools import (PastaTool, KernelFrequencyTool, WorkingSetTool,
-                    HotnessTool, MemoryTimelineTool, LocatorTool, make_tools)
+                    HotnessTool, MemoryTimelineTool, LocatorTool,
+                    RooflineTool, make_tools)
 from .tools import offload, roofline
 
 __all__ = [
     "start", "end", "region", "GridIdFilter", "current_region",
-    "Event", "EventKind", "COLLECTIVE_OPCODES",
-    "EventHandler", "attach", "default_handler",
+    "Event", "EventBatch", "EventKind", "EventRing", "COLLECTIVE_OPCODES",
+    "take_seqs", "EventHandler", "attach", "default_handler",
     "MemoryPool", "MemoryObject", "TensorHandle", "CHUNK_ALIGN",
     "EventProcessor", "analyze_access_trace", "analyze_hotness_trace",
-    "hlo", "tools", "PastaTool", "KernelFrequencyTool", "WorkingSetTool",
-    "HotnessTool", "MemoryTimelineTool", "LocatorTool", "make_tools",
+    "analyze_trace_fused", "hlo", "tools", "PastaTool",
+    "KernelFrequencyTool", "WorkingSetTool", "HotnessTool",
+    "MemoryTimelineTool", "LocatorTool", "RooflineTool", "make_tools",
     "offload", "roofline",
 ]

@@ -39,7 +39,7 @@ class EagerInstrumenter:
                  max_records_per_op: int = 65536,
                  pool_chunk: int = 32 * 1024 * 1024,
                  pool_align: int | None = None,
-                 time_source=None):
+                 time_source=None, buffered: bool = False):
         from .pool import CHUNK_ALIGN
         self.handler = handler
         self.pool = pool or MemoryPool(
@@ -51,6 +51,12 @@ class EagerInstrumenter:
         self._tensors: dict = {}          # id(arr) -> TensorHandle
         self.t0 = time.perf_counter()
         self.time_source = time_source
+        #: batch operator/tensor/trace events through the handler's SoA ring
+        #: (flushed at step boundaries and capacity); leave off for tools
+        #: that need synchronous per-event context (e.g. LocatorTool's
+        #: Python-stack capture at emit time).
+        self.buffered = buffered
+        self._prev_buffered = False
 
     # ------------------------------------------------------------ lifetime
     def tensor(self, arr, name: str = ""):
@@ -103,11 +109,17 @@ class EagerInstrumenter:
         global ACTIVE
         self._prev = ACTIVE
         ACTIVE = self
+        self._prev_buffered = self.handler.buffered
+        if self.buffered:
+            self.handler.set_buffered(True)
         return self
 
     def __exit__(self, *exc):
         global ACTIVE
         ACTIVE = self._prev
+        if self.buffered:
+            self.handler.flush()
+            self.handler.set_buffered(self._prev_buffered)
 
 
 def op_hook(name: str, inputs, outputs) -> None:

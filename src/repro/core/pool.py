@@ -24,7 +24,7 @@ import bisect
 import dataclasses
 import itertools
 
-from .events import Event, EventKind
+from .events import EventKind, next_seq
 
 CHUNK_ALIGN = 2 * 1024 * 1024        # 2 MiB — UVM/hotness block granularity
 TENSOR_ROUND = 512                   # PyTorch-style 512 B rounding
@@ -126,9 +126,9 @@ class MemoryPool:
         self._next_addr += size + self.align    # guard gap between objects
         obj = MemoryObject(next(self._oid), base, size)
         self.objects[obj.oid] = obj
-        self.handler.emit(Event(EventKind.ALLOC, name=f"object{obj.oid}",
-                                size=size, addr=base, device=self.device,
-                                attrs={"object_id": obj.oid}))
+        self.handler.emit_row(EventKind.ALLOC, name=f"object{obj.oid}",
+                              size=size, addr=base, device=self.device,
+                              attrs={"object_id": obj.oid})
         return obj
 
     # ---------------------------------------------------------------- tensors
@@ -145,15 +145,18 @@ class MemoryPool:
         obj.carve(addr, size)
         t = TensorHandle(next(self._tid), name, addr, size, nbytes, obj.oid,
                          alloc_seq=0)
-        ev = Event(EventKind.TENSOR_ALLOC, name=name or f"tensor{t.tid}",
-                   size=size, addr=addr, device=self.device,
-                   attrs={"tensor_id": t.tid, "object_id": obj.oid,
-                          "requested": nbytes})
-        t.alloc_seq = ev.seq
         self.tensors[t.tid] = t
         self.live_bytes += size
         self.peak_bytes = max(self.peak_bytes, self.live_bytes)
-        self.handler.emit(ev)
+        # seq is reserved (and the handle stamped) BEFORE dispatch so
+        # subscribers that query the pool during dispatch see a consistent
+        # handle state
+        t.alloc_seq = next_seq()
+        self.handler.emit_row(
+            EventKind.TENSOR_ALLOC, name=name or f"tensor{t.tid}",
+            size=size, addr=addr, device=self.device, seq=t.alloc_seq,
+            attrs={"tensor_id": t.tid, "object_id": obj.oid,
+                   "requested": nbytes})
         return t
 
     def free(self, t: TensorHandle) -> None:
@@ -162,11 +165,11 @@ class MemoryPool:
         self.objects[t.object_id].release(t.addr, t.size)
         self.live_bytes -= t.size
         # NOTE: raw size is negative on purpose — normalization test surface.
-        ev = Event(EventKind.TENSOR_FREE, name=t.name, size=-t.size,
-                   addr=t.addr, device=self.device,
-                   attrs={"tensor_id": t.tid, "object_id": t.object_id})
-        t.free_seq = ev.seq
-        self.handler.emit(ev)
+        t.free_seq = next_seq()          # stamp before dispatch (see alloc)
+        self.handler.emit_row(
+            EventKind.TENSOR_FREE, name=t.name, size=-t.size, addr=t.addr,
+            device=self.device, seq=t.free_seq,
+            attrs={"tensor_id": t.tid, "object_id": t.object_id})
 
     # ------------------------------------------------------------------ views
     def live_tensors(self) -> list:

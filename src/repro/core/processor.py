@@ -9,10 +9,15 @@ Two trace-analysis execution models, mirroring the paper's Fig. 2:
   * **device-resident** (Fig. 2b, PASTA's contribution): records are reduced
     *where they were produced* by vectorized device code — the Pallas TPU
     kernels in :mod:`repro.kernels` (with an XLA fallback off-TPU) — and only
-    O(#objects) aggregates are transferred.
+    O(#objects) aggregates are transferred.  When both per-object counts and
+    the hotness map are requested, the fused ``trace_aggregate`` kernel
+    produces both in a single stream over the trace (one device round-trip).
 
-Normalization handles cross-backend inconsistencies (the paper's example:
-deallocation sizes reported as negative deltas) and attaches region context.
+The coarse-grained tier is columnar end-to-end: the processor subscribes a
+*batch* callback, ``normalize_batch`` fixes cross-backend inconsistencies
+with masked vector ops (the paper's example: deallocation sizes reported as
+negative deltas), and tools consume whole batches through their ``on_batch``
+template method.
 """
 
 from __future__ import annotations
@@ -22,8 +27,13 @@ import time
 
 import numpy as np
 
-from .events import Event, EventKind, _SIGNED_SIZE_KINDS
+from .events import (Event, EventBatch, EventKind, KIND_CODE, _SIGNED_CODES,
+                     _SIGNED_SIZE_KINDS)
 from .handler import EventHandler, default_handler
+
+_KC_KERNEL = int(KIND_CODE[EventKind.KERNEL_LAUNCH])
+_KC_MEMCPY = int(KIND_CODE[EventKind.MEMCPY])
+_KC_TRACE = int(KIND_CODE[EventKind.TRACE_BUFFER])
 
 
 class EventProcessor:
@@ -36,13 +46,30 @@ class EventProcessor:
         self.tools = list(tools)
         self.device_analysis = device_analysis
         self.hotness = hotness
-        self.handler.subscribe(self._on_event, kinds=("*",))
+        self.closed = False
+        self.handler.subscribe_batch(self._on_batch)
         for t in self.tools:
             t.processor = self
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        """Detach from the handler (undo the ``__init__`` subscription).
+        Without this, constructing two processors against the process-global
+        handler double-dispatches every event."""
+        if not self.closed:
+            self.handler.unsubscribe(self._on_batch)
+            self.closed = True
+
+    def __enter__(self) -> "EventProcessor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------ normalize
     @staticmethod
     def normalize(ev: Event) -> Event:
+        """Scalar normalization (compatibility path for direct callers)."""
         if ev.normalized:
             return ev
         # sign conventions: some runtimes report frees as negative deltas
@@ -56,20 +83,71 @@ class EventProcessor:
         ev.normalized = True
         return ev
 
+    @staticmethod
+    def normalize_batch(batch: EventBatch) -> EventBatch:
+        """Vectorized normalization over a columnar batch: masked negation
+        for the signed-size kinds, a materialized ``counts`` column for
+        kernel launches (default-attr fill), memcpy direction defaults."""
+        if batch.normalized:
+            return batch
+        kinds = batch.kinds
+        signed = np.isin(kinds, _SIGNED_CODES)
+        if signed.any():
+            batch.sizes = np.where(signed & (batch.sizes < 0),
+                                   -batch.sizes, batch.sizes)
+        counts = np.ones(len(batch), dtype=np.int64)
+        if batch.attrs is not None:
+            for i in np.nonzero(kinds == _KC_KERNEL)[0]:
+                a = batch.attrs[i]
+                if a:
+                    counts[i] = int(a.get("count", 1))
+                    a.setdefault("count", 1)
+            for i in np.nonzero(kinds == _KC_MEMCPY)[0]:
+                a = batch.attrs[i]
+                if a is not None:
+                    a.setdefault("direction", "d2d")
+        batch.counts = counts
+        batch.normalized = True
+        return batch
+
     # -------------------------------------------------------------- dispatch
-    def _on_event(self, ev: Event) -> None:
-        ev = self.normalize(ev)
-        if ev.kind is EventKind.TRACE_BUFFER:
-            self._preprocess_trace(ev)
+    def _on_batch(self, batch: EventBatch) -> None:
+        if len(batch) == 1:
+            # scalar fast path: one-row batches (the ``emit`` compat shim)
+            # skip the vectorized machinery and use the per-event hooks —
+            # the golden equivalence tests pin both paths to the same output
+            ev = batch.event(0)
+            self.normalize(ev)
+            batch.sizes[0] = ev.size
+            batch.normalized = True
+            if ev.kind is EventKind.TRACE_BUFFER:
+                self._preprocess_trace(ev)
+            for tool in self.tools:
+                if tool.wants(ev.kind):
+                    tool.on_event(ev)
+            return
+        self.normalize_batch(batch)
+        tmask = batch.kinds == _KC_TRACE
+        if tmask.any():
+            for i in np.nonzero(tmask)[0]:
+                self._preprocess_trace(batch.event(int(i)))
+        if not self.tools:
+            return
+        present = batch.present_kinds()
         for tool in self.tools:
-            if tool.wants(ev.kind):
-                tool.on_event(ev)
+            if any(tool.wants(k) for k in present):
+                tool.on_batch(batch)
+
+    def _on_event(self, ev: Event) -> None:
+        """Scalar compatibility shim — wraps a one-row batch."""
+        self._on_batch(EventBatch.from_events((ev,)))
 
     def add_tool(self, tool) -> None:
         tool.processor = self
         self.tools.append(tool)
 
     def finalize(self) -> dict:
+        self.handler.flush()
         return {type(t).__name__: t.finalize() for t in self.tools}
 
     # ------------------------------------------------------- trace analysis
@@ -82,20 +160,37 @@ class EventProcessor:
             return
         mode = "device" if self.device_analysis else "host"
         elapsed = 0.0
-        if objects is not None:
-            counts, elapsed = analyze_access_trace(records, objects,
-                                                   mode=mode)
-            ev.attrs["object_counts"] = counts
-        if self.hotness is not None:
-            hp = self.hotness
+        hp = self.hotness
+        fusable = False
+        if objects is not None and hp is not None and mode == "device":
+            from repro.kernels import ops as kops
+            fusable = kops.can_fuse(len(objects), hp["n_blocks"],
+                                    hp["n_tbins"])
+        if fusable:
+            # fused path: per-object counts AND the hotness map in one
+            # device round-trip over the shared trace stream
             t = ev.attrs.get("time", 0.0)
             times = np.full(len(records), t)
-            hot, el2 = analyze_hotness_trace(
-                records, times, hp["base"], hp["n_blocks"], hp["n_tbins"],
-                hp["t_max"], mode=mode,
+            counts, hot, elapsed = analyze_trace_fused(
+                records, times, objects, hp["base"], hp["n_blocks"],
+                hp["n_tbins"], hp["t_max"],
                 block_shift=hp.get("block_shift"))
+            ev.attrs["object_counts"] = counts
             ev.attrs["hotness_map"] = hot
-            elapsed += el2
+        else:
+            if objects is not None:
+                counts, elapsed = analyze_access_trace(records, objects,
+                                                       mode=mode)
+                ev.attrs["object_counts"] = counts
+            if hp is not None:
+                t = ev.attrs.get("time", 0.0)
+                times = np.full(len(records), t)
+                hot, el2 = analyze_hotness_trace(
+                    records, times, hp["base"], hp["n_blocks"],
+                    hp["n_tbins"], hp["t_max"], mode=mode,
+                    block_shift=hp.get("block_shift"))
+                ev.attrs["hotness_map"] = hot
+                elapsed += el2
         ev.attrs["analysis_s"] = elapsed
         ev.attrs["analysis_mode"] = mode
         ev.attrs.pop("records", None)   # aggregates only past this point
@@ -160,3 +255,22 @@ def analyze_hotness_trace(addrs, times, base_addr: int, n_blocks: int,
             np.asarray(addrs), np.asarray(times), base_addr, n_blocks,
             n_tbins, t_max, block_shift=block_shift))
     return hot, time.perf_counter() - t0
+
+
+def analyze_trace_fused(addrs, times, objects, base_addr: int, n_blocks: int,
+                        n_tbins: int, t_max: float,
+                        block_shift: int | None = None):
+    """Fused device-resident reduction: per-object counts and the
+    [time_bin, block] hotness map from ONE pass over the trace (the
+    ``trace_aggregate`` kernel — shared addr tiles, two accumulators).
+    Returns ``(counts, hotness, elapsed_seconds)``."""
+    from repro.kernels import ops as kops
+    if block_shift is None:
+        block_shift = kops.BLOCK_SHIFT
+    starts = np.asarray([o[0] for o in objects], dtype=np.int64)
+    ends = np.asarray([o[1] for o in objects], dtype=np.int64)
+    t0 = time.perf_counter()
+    counts, hot = kops.trace_aggregate(
+        np.asarray(addrs), np.asarray(times), starts, ends, base_addr,
+        n_blocks, n_tbins, t_max, block_shift=block_shift)
+    return counts, hot, time.perf_counter() - t0

@@ -14,6 +14,7 @@ from .workingset import WorkingSetTool
 from .hotness import HotnessTool
 from .timeline import MemoryTimelineTool
 from .locator import LocatorTool
+from .roofline import RooflineTool
 from . import offload
 from . import roofline
 
@@ -23,6 +24,7 @@ REGISTRY = {
     "hotness": HotnessTool,
     "timeline": MemoryTimelineTool,
     "locator": LocatorTool,
+    "roofline": RooflineTool,
 }
 
 
@@ -41,5 +43,5 @@ def make_tools(names: str | list | None = None, **kw) -> list:
 
 
 __all__ = ["PastaTool", "KernelFrequencyTool", "WorkingSetTool",
-           "HotnessTool", "MemoryTimelineTool", "LocatorTool", "offload",
-           "roofline", "REGISTRY", "make_tools"]
+           "HotnessTool", "MemoryTimelineTool", "LocatorTool",
+           "RooflineTool", "offload", "roofline", "REGISTRY", "make_tools"]

@@ -6,11 +6,18 @@ functions in the PASTA tool collection template".  ``EVENTS`` narrows which
 kinds are routed to the tool at all (low-overhead: uninteresting events never
 reach user code).  ``KNOBS`` is the paper's predefined-knob mechanism for the
 inefficiency-location utilities (e.g. ``MAX_MEM_REFERENCED_KERNEL``).
+
+Dispatch is columnar: the processor hands each tool a whole
+:class:`~repro.core.events.EventBatch` through :meth:`PastaTool.on_batch`.
+The default implementation is a loop-over-rows fallback that materializes
+scalar Events and dispatches to the ``on_<kind>`` hooks, so existing
+subclasses keep working unchanged; hot tools override ``on_batch`` with true
+vectorized consumption (``np.bincount`` / ``np.add.at`` over the columns).
 """
 
 from __future__ import annotations
 
-from ..events import Event, EventKind
+from ..events import Event, EventBatch, EventKind
 
 
 class PastaTool:
@@ -28,6 +35,16 @@ class PastaTool:
     def wants(self, kind: EventKind) -> bool:
         return "*" in self.EVENTS or kind in self.EVENTS \
             or kind.value in self.EVENTS
+
+    def on_batch(self, batch: EventBatch) -> None:
+        """Consume a columnar batch.  Default: materialize matching rows and
+        dispatch them to the scalar ``on_<kind>`` hooks (compatibility
+        fallback).  Vectorized tools override this — but must keep their
+        scalar hooks equivalent, because one-row (scalar-emit) dispatch
+        takes the ``on_<kind>`` fast path; the golden batch-vs-scalar tests
+        pin both paths to identical reports."""
+        for ev in batch.iter_events(self.EVENTS):
+            self.on_event(ev)
 
     def on_event(self, ev: Event) -> None:
         fn = getattr(self, f"on_{ev.kind.value}", None)

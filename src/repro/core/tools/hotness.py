@@ -37,6 +37,18 @@ class HotnessTool(PastaTool):
         tb, nb = h.shape
         self.hot[:tb, :nb] += h
 
+    def on_batch(self, batch):
+        """Sum the per-buffer device aggregates straight off the attrs side
+        table — no scalar Event materialization on the batch path."""
+        for i in batch.rows(EventKind.TRACE_BUFFER):
+            a = batch.attrs_at(int(i))
+            h = None if a is None else a.get("hotness_map")
+            if h is None:
+                continue
+            h = np.asarray(h)
+            tb, nb = h.shape
+            self.hot[:tb, :nb] += h
+
     def classify(self, hot_frac: float = 0.5):
         """Split blocks into persistent-hot vs bursty vs cold."""
         touched = self.hot > 0

@@ -10,6 +10,13 @@ memory-referenced one) is reported together with
 
 Knobs: ``MAX_MEM_REFERENCED_KERNEL`` (default) and ``MAX_CALLED_KERNEL``;
 users add custom knobs by overriding :meth:`score`.
+
+NOTE: this tool captures the live Python stack at operator/region dispatch,
+so it should run against an *unbuffered* handler (the default).  Under ring
+buffering the batch reaches the tool at flush time and the captured stack
+would reflect the flush site, not the emitting frame — the template's
+loop-over-rows ``on_batch`` fallback still dispatches correctly, but the
+cross-layer context is weaker.
 """
 
 from __future__ import annotations

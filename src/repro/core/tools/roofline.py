@@ -1,4 +1,6 @@
-"""Roofline tool — derives the three roofline terms from dry-run artifacts.
+"""Roofline tool — derives the three roofline terms from dry-run artifacts,
+plus a batch-consuming :class:`RooflineTool` that accumulates the same terms
+live from the columnar event stream.
 
 Terms (per the assignment; the compiled SPMD module is the *per-device*
 program, so parsed FLOPs/bytes are already per-chip and divide by per-chip
@@ -86,3 +88,85 @@ def model_flops(n_params: float, n_tokens: float, training: bool = True,
     N_active."""
     n = n_active_params if n_active_params is not None else n_params
     return (6.0 if training else 2.0) * n * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# Event-stream roofline accumulator (columnar tool)
+# ---------------------------------------------------------------------------
+
+import numpy as np                                        # noqa: E402
+
+from ..events import EventKind                            # noqa: E402
+from .base import PastaTool                               # noqa: E402
+
+
+class RooflineTool(PastaTool):
+    """Accumulates the three roofline terms from the event stream itself:
+    per-chip HBM traffic from KERNEL_LAUNCH batches (``bytes × count``),
+    wire bytes from COLLECTIVE batches (``size × mult``), and FLOPs from the
+    COMPILE event's cost analysis.  Batch consumption is vectorized over the
+    size/count columns; attrs are only touched on the (few) rows that carry
+    them."""
+
+    EVENTS = (EventKind.KERNEL_LAUNCH, EventKind.COLLECTIVE,
+              EventKind.COMPILE)
+
+    def __init__(self, hw: dict = V5E, model_flops_per_chip: float = 0.0,
+                 **knobs):
+        super().__init__(**knobs)
+        self.hw = dict(hw)
+        self.model_flops_per_chip = model_flops_per_chip
+        self.flops = 0.0
+        self.hbm_bytes = 0.0
+        self.coll_bytes = 0.0
+        self.kernel_invocations = 0
+
+    # scalar hooks — kept equivalent to on_batch (single-row fast path)
+    def on_kernel_launch(self, ev):
+        n = int(ev.attrs.get("count", 1))
+        self.kernel_invocations += n
+        self.hbm_bytes += float(ev.attrs.get("bytes", 0)) * n
+
+    def on_collective(self, ev):
+        self.coll_bytes += float(ev.size) * float(ev.attrs.get("mult", 1))
+
+    def on_compile(self, ev):
+        ca = ev.attrs.get("cost_analysis") or {}
+        self.flops += float(ca.get("flops", 0.0))
+
+    def on_batch(self, batch):
+        kidx = batch.rows(EventKind.KERNEL_LAUNCH)
+        if kidx.size:
+            counts = (batch.counts[kidx] if batch.counts is not None
+                      else np.ones(kidx.size, dtype=np.int64))
+            self.kernel_invocations += int(counts.sum())
+            if batch.attrs is not None:
+                for j, i in enumerate(kidx):
+                    a = batch.attrs[i]
+                    if a:
+                        self.hbm_bytes += (float(a.get("bytes", 0))
+                                           * float(counts[j]))
+        cidx = batch.rows(EventKind.COLLECTIVE)
+        if cidx.size:
+            if batch.attrs is None:
+                self.coll_bytes += float(batch.sizes[cidx].sum())
+            else:
+                for i in cidx:
+                    a = batch.attrs[i]
+                    mult = float(a.get("mult", 1)) if a else 1.0
+                    self.coll_bytes += float(batch.sizes[i]) * mult
+        for i in batch.rows(EventKind.COMPILE):
+            a = batch.attrs_at(int(i))
+            if a:
+                ca = a.get("cost_analysis") or {}
+                self.flops += float(ca.get("flops", 0.0))
+
+    def finalize(self) -> dict:
+        rl = roofline(self.flops, self.hbm_bytes, self.coll_bytes,
+                      model_flops_per_chip=self.model_flops_per_chip,
+                      hw=self.hw)
+        out = rl.as_dict()
+        out.update(kernel_invocations=self.kernel_invocations,
+                   hbm_bytes=self.hbm_bytes, coll_bytes=self.coll_bytes,
+                   flops=self.flops)
+        return out

@@ -17,8 +17,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..events import EventKind
+from ..events import EventKind, KIND_CODE
 from .base import PastaTool
+
+_KC_KERNEL = int(KIND_CODE[EventKind.KERNEL_LAUNCH])
+_KC_ALLOC = int(KIND_CODE[EventKind.ALLOC])
 
 
 class WorkingSetTool(PastaTool):
@@ -55,6 +58,29 @@ class WorkingSetTool(PastaTool):
     # ------------------------------------------------------------ kernels
     def on_kernel_launch(self, ev):
         self.kernel_count += int(ev.attrs.get("count", 1))
+
+    # ------------------------------------------------------------ batched
+    def on_batch(self, batch):
+        """Vectorized consumption of the hot columns (kernel invocation
+        totals via the normalized ``counts`` column, pool footprint via a
+        masked size sum); the attr-dependent memory/operator/trace rows are
+        rare and fall back to ordered per-row dispatch (their peak/live
+        accounting is order-sensitive)."""
+        kinds = batch.kinds
+        kmask = kinds == _KC_KERNEL
+        if kmask.any():
+            if batch.counts is not None:
+                self.kernel_count += int(batch.counts[kmask].sum())
+            else:
+                self.kernel_count += int(kmask.sum())
+        amask = kinds == _KC_ALLOC
+        if amask.any():
+            self.footprint += int(batch.sizes[amask].sum())
+        for ev in batch.iter_events((EventKind.TENSOR_ALLOC,
+                                     EventKind.TENSOR_FREE,
+                                     EventKind.OPERATOR_START,
+                                     EventKind.TRACE_BUFFER)):
+            self.on_event(ev)
 
     def on_operator_start(self, ev):
         tensors = ev.attrs.get("tensors")

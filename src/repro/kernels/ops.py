@@ -23,7 +23,9 @@ import numpy as np
 
 from . import ref
 from .trace_aggregate import BLOCK_T as AGG_BLOCK_T, BLOCK_K as AGG_BLOCK_K
-from .trace_aggregate import object_histogram_pallas
+from .trace_aggregate import (FUSE_BLOCK_T, FUSE_BLOCK_K, FUSE_VMEM_BUDGET,
+                              fuse_vmem_bytes, object_histogram_pallas,
+                              trace_aggregate_pallas)
 from .hotness import BLOCK_T as HOT_BLOCK_T, BLOCK_B as HOT_BLOCK_B
 from .hotness import hotness_histogram_pallas
 
@@ -43,6 +45,9 @@ def _backend() -> str:
 _ref_object_histogram = jax.jit(ref.object_histogram_ref)
 _ref_hotness = jax.jit(ref.hotness_histogram_ref,
                        static_argnames=("n_blocks", "n_tbins", "block_shift"))
+_ref_trace_aggregate = jax.jit(
+    ref.trace_aggregate_ref,
+    static_argnames=("n_blocks", "n_tbins", "block_shift"))
 
 
 def _pad_to(x: np.ndarray, mult: int, value) -> np.ndarray:
@@ -102,3 +107,54 @@ def hotness_histogram(addrs_bytes, times, base_addr: int, n_blocks: int,
                                    nb_p, n_tbins, block_shift,
                                    interpret=backend == "interpret")
     return np.asarray(out[:, :n_blocks]).astype(np.int64)
+
+
+def can_fuse(n_objects: int, n_blocks: int, n_tbins: int) -> bool:
+    """Whether the fused counts+hotness kernel can host this problem.  The
+    fused kernel keeps the whole object table and hotness matrix resident in
+    VMEM and materializes (tile × table) one-hot operands, so its working
+    set must fit the VMEM budget — limits the tiled two-pass kernels do not
+    have; callers fall back to the separate kernels when this returns False.
+    The jnp oracle backend has no such limits."""
+    if _backend() == "ref":
+        return True
+    k_p = n_objects + ((-n_objects) % FUSE_BLOCK_K)
+    nb_p = n_blocks + ((-n_blocks) % HOT_BLOCK_B)
+    return fuse_vmem_bytes(k_p, nb_p, n_tbins) <= FUSE_VMEM_BUDGET
+
+
+def trace_aggregate(addrs_bytes, times, starts_bytes, ends_bytes,
+                    base_addr: int, n_blocks: int, n_tbins: int,
+                    t_max: float, block_shift: int = BLOCK_SHIFT):
+    """Fused per-object counts AND [time-bin × block] hotness from ONE pass
+    over the trace (one device round-trip instead of two).  Returns
+    ``(int64[K] counts, int64[n_tbins, n_blocks] hotness)`` identical to
+    running :func:`object_histogram` and :func:`hotness_histogram`
+    separately."""
+    k = len(starts_bytes)
+    a = _to_units(addrs_bytes)
+    s = _to_units(starts_bytes)
+    e = _to_units(ends_bytes)
+    t = np.asarray(times, dtype=np.float64)
+    tb = np.minimum((t / max(t_max, 1e-12) * n_tbins).astype(np.int32),
+                    n_tbins - 1)
+    base = np.int32(int(base_addr) >> UNIT_SHIFT)
+    assert a.shape[0] < 2**24, "split traces >16M records for exact f32 accum"
+    backend = _backend()
+    if backend == "ref":
+        counts, hist = _ref_trace_aggregate(
+            jnp.asarray(a), jnp.asarray(tb), jnp.asarray(s), jnp.asarray(e),
+            base, n_blocks=n_blocks, n_tbins=n_tbins, block_shift=block_shift)
+        return (np.asarray(counts).astype(np.int64),
+                np.asarray(hist).astype(np.int64))
+    a_p = _pad_to(a, FUSE_BLOCK_T, -1)
+    tb_p = _pad_to(tb, FUSE_BLOCK_T, -1)
+    s_p = _pad_to(s, FUSE_BLOCK_K, _I32_MAX)
+    e_p = _pad_to(e, FUSE_BLOCK_K, _I32_MAX)
+    nb_p = n_blocks + ((-n_blocks) % HOT_BLOCK_B)
+    counts, hist = trace_aggregate_pallas(
+        jnp.asarray(a_p), jnp.asarray(tb_p), jnp.asarray(s_p),
+        jnp.asarray(e_p), base, block_shift, n_blocks=nb_p, n_tbins=n_tbins,
+        interpret=backend == "interpret")
+    return (np.asarray(counts[:k]).astype(np.int64),
+            np.asarray(hist[:, :n_blocks]).astype(np.int64))

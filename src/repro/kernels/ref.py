@@ -26,6 +26,17 @@ def object_histogram_ref(addrs: jax.Array, starts: jax.Array,
                                num_segments=starts.shape[0])
 
 
+def trace_aggregate_ref(addrs: jax.Array, tbins: jax.Array,
+                        starts: jax.Array, ends: jax.Array, base: int,
+                        n_blocks: int, n_tbins: int, block_shift: int):
+    """Fused oracle: per-object counts AND the [time-bin × block] hotness
+    map from one (jit-compiled) pass over the shared trace columns — the
+    XLA fallback for the fused ``trace_aggregate`` Pallas kernel."""
+    return (object_histogram_ref(addrs, starts, ends),
+            hotness_histogram_ref(addrs, tbins, base, n_blocks, n_tbins,
+                                  block_shift))
+
+
 def hotness_histogram_ref(addrs: jax.Array, tbins: jax.Array, base: int,
                           n_blocks: int, n_tbins: int,
                           block_shift: int) -> jax.Array:

@@ -47,6 +47,109 @@ def _kernel(addrs_ref, starts_ref, ends_ref, counts_ref):
                                    preferred_element_type=jnp.float32)
 
 
+#: trace records per tile for the fused counts+hotness kernel; smaller than
+#: BLOCK_T because the tile feeds THREE one-hot matmuls' operands at once
+FUSE_BLOCK_T = 1024
+#: object-table padding granularity for the fused kernel (full table
+#: resident in VMEM, so pad to the 128-lane tile only)
+FUSE_BLOCK_K = 128
+#: conservative slice of the ~16 MiB VMEM left for the fused kernel's
+#: working set (accumulators + one-hot operands + compiler temporaries)
+FUSE_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def fuse_vmem_bytes(k: int, n_blocks: int, n_tbins: int) -> int:
+    """Worst-case f32 VMEM footprint of one fused-kernel grid step: the
+    resident accumulators (counts[K], hist[tbins, blocks]) plus the
+    per-tile transients — in_range (T×K), onehot_t (T×tbins), onehot_b
+    (T×blocks) — doubled for their iota/compare intermediates.  Used by
+    :func:`repro.kernels.ops.can_fuse` to route oversize problems to the
+    tiled two-pass kernels instead."""
+    resident = 4 * (k + n_tbins * n_blocks)
+    transient = 4 * FUSE_BLOCK_T * (k + n_blocks + n_tbins)
+    return resident + 2 * transient
+
+
+def _fused_kernel(addrs_ref, tbins_ref, starts_ref, ends_ref, meta_ref,
+                  counts_ref, hist_ref):
+    """One stream over the trace, two accumulators: per-object counts and
+    the [time-bin × block] hotness map share each (1, FUSE_BLOCK_T) addr
+    tile, so the trace is read from HBM exactly once (vs twice for the
+    separate object_histogram + hotness_histogram kernels)."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    a = addrs_ref[0, :]                        # (T,) shared addr tile
+    # --- accumulator 1: per-object counts (histogram-as-matmul) ----------
+    s = starts_ref[0, :]                       # (K,)
+    e = ends_ref[0, :]
+    in_range = ((a[:, None] >= s[None, :]) &
+                (a[:, None] < e[None, :])).astype(jnp.float32)   # (T, K)
+    ones = jnp.ones((1, a.shape[0]), dtype=jnp.float32)
+    counts_ref[...] += jax.lax.dot(ones, in_range,
+                                   preferred_element_type=jnp.float32)
+    # --- accumulator 2: time×block hotness (rank-expanding one-hots) ------
+    base = meta_ref[0, 0]
+    shift = meta_ref[0, 1]
+    n_tbins, n_blocks = hist_ref.shape
+    tb = tbins_ref[0, :]
+    blk = jax.lax.shift_right_arithmetic(a - base, shift)
+    valid = (blk >= 0) & (blk < n_blocks) & \
+            (tb >= 0) & (tb < n_tbins) & (a >= 0)
+    t_iota = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], n_tbins), 1)
+    b_iota = jax.lax.broadcasted_iota(jnp.int32, (a.shape[0], n_blocks), 1)
+    onehot_t = ((tb[:, None] == t_iota) & valid[:, None]).astype(jnp.float32)
+    onehot_b = (blk[:, None] == b_iota).astype(jnp.float32)
+    hist_ref[...] += jax.lax.dot(onehot_t.T, onehot_b,
+                                 preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks", "n_tbins",
+                                              "interpret"))
+def trace_aggregate_pallas(addrs: jax.Array, tbins: jax.Array,
+                           starts: jax.Array, ends: jax.Array, base,
+                           block_shift, n_blocks: int, n_tbins: int,
+                           interpret: bool = False):
+    """Fused device pass: addrs int32[N] (512 B units, -1 = padding),
+    tbins int32[N] (-1 = padding), starts/ends int32[K] (disjoint sorted
+    ranges, padded with empty [MAX, MAX)) → (f32[K] counts,
+    f32[n_tbins, n_blocks] hotness).  Both the object table and the hotness
+    matrix stay resident in VMEM across the whole stream (grid is the trace
+    axis only), bounded by FUSE_VMEM_BUDGET — callers must pre-check with
+    ``ops.can_fuse`` and fall back to the tiled two-pass kernels."""
+    n = addrs.shape[0]
+    k = starts.shape[0]
+    assert n % FUSE_BLOCK_T == 0 and k % FUSE_BLOCK_K == 0, (n, k)
+    assert fuse_vmem_bytes(k, n_blocks, n_tbins) <= FUSE_VMEM_BUDGET, \
+        f"fused working set exceeds VMEM budget: {(k, n_blocks, n_tbins)}"
+    grid = (n // FUSE_BLOCK_T,)
+    meta = jnp.array([[base, block_shift]], dtype=jnp.int32)
+    counts, hist = pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, FUSE_BLOCK_T), lambda nn: (0, nn)),
+            pl.BlockSpec((1, FUSE_BLOCK_T), lambda nn: (0, nn)),
+            pl.BlockSpec((1, k), lambda nn: (0, 0)),
+            pl.BlockSpec((1, k), lambda nn: (0, 0)),
+            pl.BlockSpec((1, 2), lambda nn: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda nn: (0, 0)),
+            pl.BlockSpec((n_tbins, n_blocks), lambda nn: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_tbins, n_blocks), jnp.float32),
+        ],
+        interpret=interpret,
+    )(addrs.reshape(1, n), tbins.reshape(1, n), starts.reshape(1, k),
+      ends.reshape(1, k), meta)
+    return counts[0], hist
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def object_histogram_pallas(addrs: jax.Array, starts: jax.Array,
                             ends: jax.Array, interpret: bool = False):

@@ -70,7 +70,9 @@ def main():
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s)")
     print(f"[serve] sample: {out[0][:12].tolist()}")
-    for name, rep in proc.finalize().items():
+    reports = proc.finalize()
+    proc.close()
+    for name, rep in reports.items():
         short = {k: v for k, v in rep.items()
                  if k not in ("series", "top", "by_label")}
         print(f"  {name}: {short}")

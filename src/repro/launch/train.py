@@ -127,6 +127,7 @@ def main():
     handler.capture_compiled(compiled, label="train_step",
                              default_trip=cfg.n_layers, steps=step - start)
     reports = proc.finalize()
+    proc.close()
     print("[pasta] tool reports:")
     for name, rep in reports.items():
         short = {k: v for k, v in rep.items() if k not in ("series", "top",

@@ -20,6 +20,19 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _mod.strategies
 
 import repro.core as pasta
+from repro.core import events as _events_mod
+from repro.core import handler as _handler_mod
+
+
+@pytest.fixture(autouse=True)
+def _fresh_event_globals():
+    """Reset the process-global default handler and the Event sequence
+    counter before every test, so outcomes never depend on collection
+    order (a leaked subscriber on the global handler — or a drifting seq
+    counter — made tests order-sensitive before)."""
+    _handler_mod._default = None
+    _events_mod.reset_seq()
+    yield
 
 
 @pytest.fixture()
