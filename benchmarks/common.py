@@ -38,33 +38,34 @@ def instrumented_inference(arch: str, batch=2, seq=64, fine=True,
                            pool_chunk: int = 1 << 20,
                            pool_align: int | None = None):
     """Run a reduced ``arch`` forward eagerly under full PASTA
-    instrumentation; returns (handler, processor, instrumenter, reports)."""
+    instrumentation inside one scoped Session; returns
+    ``(session, reports)`` — reports keyed by tool registry name."""
     import jax
     import repro.configs as C
     import repro.core as pasta
-    from repro.core.instrument import EagerInstrumenter
     from repro.models import init_params, forward
 
     cfg = C.reduced(C.get(arch))
-    handler = pasta.attach()
-    tools = tools if tools is not None else [pasta.WorkingSetTool(),
-                                             pasta.MemoryTimelineTool()]
-    proc = pasta.EventProcessor(handler, tools=tools, hotness=hotness)
+    session = pasta.Session(
+        tools=tools if tools is not None else "workingset,timeline",
+        hotness=hotness, instrument=True, fine=fine,
+        pool_chunk=pool_chunk, pool_align=pool_align,
+        name=f"bench/{arch}")
+    handler = session.handler
+    session.instrumenter.time_source = \
+        lambda: float(max(handler._step, 0))
     params = init_params(jax.random.PRNGKey(0), cfg)
     key = jax.random.PRNGKey(1)
     if cfg.frontend == "embed":
         x = jax.random.normal(key, (batch, seq, cfg.d_model))
     else:
         x = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
-    inst = EagerInstrumenter(handler, fine=fine, pool_chunk=pool_chunk,
-                             pool_align=pool_align,
-                             time_source=lambda: float(max(handler._step, 0)))
-    with inst:
+    with session:
         for s in range(steps):
             handler.step_start(s)
             with pasta.region(f"step{s}"):
                 logits, _ = forward(params, x, cfg)
             handler.step_end(s)
-    reports = proc.finalize()
-    proc.close()          # detach from the (process-global) handler
-    return handler, proc, inst, reports
+    reports = session.reports()
+    session.close()
+    return session, reports

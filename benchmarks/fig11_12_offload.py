@@ -53,11 +53,12 @@ def main() -> list:
         tool = _ScheduleTool()
         # small pool chunks (128 KiB, 4 KiB aligned): several tensors per
         # memory object, many objects — the paper's pool topology at toy scale
-        handler, proc, inst, _ = instrumented_inference(
+        session, _ = instrumented_inference(
             arch, fine=False, tools=[tool], steps=3,
             pool_chunk=128 << 10, pool_align=4 << 10)
-        object_sizes = {o.oid: o.size for o in inst.pool.objects.values()}
-        footprint = inst.pool.footprint
+        object_sizes = {o.oid: o.size
+                        for o in session.pool.objects.values()}
+        footprint = session.pool.footprint
         res = {}
         for ov in (1.0, 3.0):
             res[ov] = offload.plan(tool.kernels, object_sizes, footprint,

@@ -21,9 +21,9 @@ def main() -> list:
     hot_cfg = {"base": CHUNK_ALIGN, "n_blocks": 256, "n_tbins": steps,
                "t_max": float(steps), "block_shift": 5}
     tool = pasta.HotnessTool(n_tbins=steps, n_blocks=256, hot_frac=0.75)
-    handler, proc, inst, reports = instrumented_inference(
+    _session, reports = instrumented_inference(
         "paper-bert", fine=True, tools=[tool], hotness=hot_cfg, steps=steps)
-    rep = reports["HotnessTool"]
+    rep = reports["hotness"].data
     n_pers = len(rep["persistent_blocks"])
     n_burst = len(rep["bursty_blocks"])
     save("fig13_hotness", rep)

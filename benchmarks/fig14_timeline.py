@@ -21,7 +21,6 @@ import jax.numpy as jnp
 
 import repro.configs as C
 import repro.core as pasta
-from repro.core.instrument import EagerInstrumenter
 from repro.models import init_params, forward, cross_entropy
 from .common import row, save
 
@@ -33,16 +32,15 @@ def main() -> list:
     x = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
     labels = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
 
-    # backend A: eager (instrumented lifetimes)
-    handler = pasta.attach()
-    tool = pasta.MemoryTimelineTool()
-    proc = pasta.EventProcessor(handler, tools=[tool])
-    with EagerInstrumenter(handler, fine=False):
+    # backend A: eager (instrumented lifetimes) — one scoped session
+    session = pasta.Session(tools="timeline", instrument=True, fine=False,
+                            name="fig14")
+    with session:
         with pasta.region("iteration"):
             logits, _ = forward(params, x, cfg)
             loss, _ = cross_entropy(logits, labels)
-    eager = proc.finalize()["MemoryTimelineTool"]
-    proc.close()
+    eager = session.reports()["timeline"].data
+    session.close()
     dev = eager["devices"][0]
     e_series = [b for _s, b, _r in eager["series"][dev]]
 

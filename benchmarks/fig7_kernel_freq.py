@@ -28,9 +28,9 @@ def main() -> list:
     report = {}
     for arch in ARCHS:
         cfg = C.reduced(C.get(arch))
-        handler = pasta.attach()
-        tool = pasta.KernelFrequencyTool(top_k=10)
-        proc = pasta.EventProcessor(handler, tools=[tool])
+        session = pasta.Session(tools="kernel_freq:top_k=10",
+                                name=f"fig7/{arch}")
+        handler = session.handler
         params = init_params(jax.random.PRNGKey(0), cfg)
         key = jax.random.PRNGKey(1)
         if cfg.frontend == "embed":
@@ -57,8 +57,8 @@ def main() -> list:
             handler.capture_compiled(c_dec, label=f"{arch}.decode",
                                      default_trip=cfg.n_layers, steps=100)
         capture_us = (time.perf_counter() - t0) * 1e6
-        rep = proc.finalize()["KernelFrequencyTool"]
-        proc.close()
+        rep = session.reports()["kernel_freq"].data
+        session.close()
         total = rep["total_invocations"]
         top5 = sum(c for _n, c in rep["top"][:5])
         report[arch] = {"total": total, "distinct": rep["distinct_kernels"],

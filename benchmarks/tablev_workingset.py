@@ -17,11 +17,9 @@ MODELS = ("paper-gpt2", "paper-bert", "mamba2-2.7b", "glm4-9b",
 def main() -> list:
     rows = []
     table = {}
-    import repro.core as pasta
     for arch in MODELS:
-        tools = [pasta.WorkingSetTool()]
-        _h, _p, inst, reports = instrumented_inference(arch, tools=tools)
-        ws = reports["WorkingSetTool"]
+        _session, reports = instrumented_inference(arch, tools="workingset")
+        ws = reports["workingset"].data
         table[arch] = ws
         ratio = ws["footprint_mb"] / max(ws["working_set_mb"], 1e-9)
         rows.append(row(

@@ -17,7 +17,6 @@ import jax
 
 import repro.configs as configs
 import repro.core as pasta
-from repro.core.instrument import EagerInstrumenter
 from repro.core.pool import CHUNK_ALIGN
 from repro.core.tools import offload
 from repro.models import init_params, forward
@@ -30,15 +29,22 @@ def main():
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get(args.arch))
-    handler = pasta.attach()
     hot_cfg = {"base": CHUNK_ALIGN, "n_blocks": 256,
                "n_tbins": args.steps, "t_max": float(args.steps),
                "block_shift": 5}
-    ws = pasta.WorkingSetTool()
-    hot = pasta.HotnessTool(n_tbins=args.steps, n_blocks=256, hot_frac=0.75)
-    loc = pasta.LocatorTool()
-    proc = pasta.EventProcessor(handler, tools=[ws, hot, loc],
-                                hotness=hot_cfg)
+    # one Session owns tools + fine-grained instrumentation; knob-bearing
+    # tools can mix spec strings and instances in the tools list
+    session = pasta.Session(
+        tools=["workingset",
+               pasta.HotnessTool(n_tbins=args.steps, n_blocks=256,
+                                 hot_frac=0.75),
+               "locator"],
+        hotness=hot_cfg, instrument=True, fine=True,
+        pool_chunk=128 << 10, pool_align=4 << 10,
+        name=f"analyze/{args.arch}")
+    handler = session.handler
+    session.instrumenter.time_source = \
+        lambda: float(max(handler._step, 0))
 
     params = init_params(jax.random.PRNGKey(0), cfg)
     x = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
@@ -47,9 +53,6 @@ def main():
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
 
     schedule = []
-    inst = EagerInstrumenter(handler, fine=True, pool_chunk=128 << 10,
-                             pool_align=4 << 10,
-                             time_source=lambda: float(max(handler._step, 0)))
     addr2obj = {}
     handler.subscribe(
         lambda e: addr2obj.update({e.addr: (e.attrs["object_id"], e.size,
@@ -66,28 +69,27 @@ def main():
                 tensors))
     handler.subscribe(grab, kinds=("operator_start",))
 
-    with inst:
+    with session:
         for s in range(args.steps):
             handler.step_start(s)
             forward(params, x, cfg)
             handler.step_end(s)
 
-    reports = proc.finalize()
-    proc.close()              # detach from the process-global handler
+    reports = session.reports()
     print(f"== {args.arch} characterization ==")
-    w = reports["WorkingSetTool"]
+    w = reports["workingset"]
     print(f"working set: max={w['working_set_mb']:.2f}MB "
           f"median={w['median_ws_mb']:.2f}MB "
           f"footprint={w['footprint_mb']:.1f}MB")
-    h = reports["HotnessTool"]
+    h = reports["hotness"]
     print(f"hotness: persistent(pin)={len(h['persistent_blocks'])} "
           f"bursty(evict)={len(h['bursty_blocks'])} cold={h['cold_blocks']}")
-    locr = reports["LocatorTool"]
+    locr = reports["locator"]
     print(f"locator: hottest={locr.get('kernel')} "
           f"op={locr.get('hlo_op_name', '')[:60]}")
-    objects = {o.oid: o.size for o in inst.pool.objects.values()}
+    objects = {o.oid: o.size for o in session.pool.objects.values()}
     for ov in (1.0, 3.0):
-        plan = offload.plan(schedule, objects, inst.pool.footprint, ov)
+        plan = offload.plan(schedule, objects, session.pool.footprint, ov)
         print(f"offload @ oversubscription {ov}: "
               f"object={plan['object']['speedup_vs_none']:.2f}x "
               f"tensor={plan['tensor']['speedup_vs_none']:.2f}x vs on-demand")

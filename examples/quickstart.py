@@ -1,64 +1,62 @@
-"""Quickstart — attach PASTA to a training workload in ~30 lines.
+"""Quickstart — attach PASTA to a training workload in ~25 lines.
 
-Runs a reduced GPT-2 for a few steps with the kernel-frequency, working-set
-and memory-timeline tools attached, then prints their reports.
+One ``pasta.Session`` owns the whole pipeline: tool selection by registry
+spec, framework-level instrumentation (operator events, tensor lifetimes,
+fine-grained access traces reduced on device), ring buffering, and the
+compiled-artifact capture.  No handler/processor hand-wiring.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
-import jax.numpy as jnp
 
 import repro.configs as configs
 import repro.core as pasta
-from repro.core.instrument import EagerInstrumenter
-from repro.models import init_params, forward, cross_entropy
+from repro.models import init_params, forward
 from repro.train import OptConfig, make_train_step
 from repro.train.optimizer import init_opt_state
 
 
 def main():
     cfg = configs.reduced(configs.get("paper-gpt2"))
-    handler = pasta.attach()                       # per-process injection
-    tools = pasta.make_tools("kernel_freq,workingset,timeline")
-    proc = pasta.EventProcessor(handler, tools=tools)
-
     params = init_params(jax.random.PRNGKey(0), cfg)
     key = jax.random.PRNGKey(1)
     x = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
     labels = jax.random.randint(key, (2, 64), 0, cfg.vocab_size)
 
-    # 1) eager instrumented pass: framework-level events (operators, tensor
-    #    lifetimes, fine-grained access traces reduced on device); buffered=
-    #    True batches them through the SoA ring (flushed at step edges)
-    with EagerInstrumenter(handler, fine=True, buffered=True):
-        with pasta.region("forward"):              # paper Listing 1 style
+    # one Session = scoped attach + tools + instrumentation + buffering;
+    # tools are registry specs (knobs would be "kernel_freq:top_k=5")
+    with pasta.Session(tools="kernel_freq,workingset,timeline",
+                       instrument=True, fine=True, buffered=True,
+                       name="quickstart") as session:
+        # 1) eager instrumented pass: framework-level events batched
+        #    through the SoA ring (flushed at step edges / session exit)
+        with pasta.region("forward"):               # paper Listing 1 style
             logits, _ = forward(params, x, cfg)
 
-    # 2) compiled-artifact capture: kernel launches & collectives × steps
-    opt_cfg = OptConfig()
-    step = make_train_step(cfg, opt_cfg, microbatches=1)
-    opt = init_opt_state(params, opt_cfg)
-    compiled = jax.jit(step).lower(params, opt,
-                                   {"inputs": x, "labels": labels}).compile()
-    handler.capture_compiled(compiled, label="train_step",
-                             default_trip=cfg.n_layers, steps=5)
+        # 2) compiled-artifact capture: kernel launches & collectives × steps
+        opt_cfg = OptConfig()
+        step = make_train_step(cfg, opt_cfg, microbatches=1)
+        opt = init_opt_state(params, opt_cfg)
+        compiled = jax.jit(step).lower(
+            params, opt, {"inputs": x, "labels": labels}).compile()
+        session.capture_compiled(compiled, label="train_step",
+                                 default_trip=cfg.n_layers, steps=5)
 
     print("== PASTA tool reports ==")
-    for name, rep in proc.finalize().items():
-        if name == "KernelFrequencyTool":
-            print(f"{name}: total={rep['total_invocations']} "
-                  f"distinct={rep['distinct_kernels']} top3={rep['top'][:3]}")
-        elif name == "WorkingSetTool":
-            print(f"{name}: footprint={rep['footprint_mb']:.1f}MB "
-                  f"ws={rep['working_set_mb']:.2f}MB "
-                  f"median={rep['median_ws_mb']:.2f}MB")
-        elif name == "MemoryTimelineTool":
-            d = rep["devices"][0]
-            print(f"{name}: peak={rep['peak_bytes'][d]}B "
-                  f"allocs={rep['alloc_events'][d]} "
-                  f"frees={rep['free_events'][d]}")
-    proc.close()              # detach from the process-global handler
+    reports = session.reports()
+    kf = reports["kernel_freq"]
+    print(f"kernel_freq: total={kf['total_invocations']} "
+          f"distinct={kf['distinct_kernels']} top3={kf['top'][:3]}")
+    ws = reports["workingset"]
+    print(f"workingset: footprint={ws['footprint_mb']:.1f}MB "
+          f"ws={ws['working_set_mb']:.2f}MB "
+          f"median={ws['median_ws_mb']:.2f}MB")
+    tl = reports["timeline"]
+    d = tl["devices"][0]
+    print(f"timeline: peak={tl['peak_bytes'][d]}B "
+          f"allocs={tl['alloc_events'][d]} frees={tl['free_events'][d]}")
+    print(reports["kernel_freq"].to_json()[:120] + "...")
 
 
 if __name__ == "__main__":

@@ -2,11 +2,18 @@
 
 Public surface (``import repro.core as pasta``):
 
+  * session:     ``pasta.Session`` — the unified facade: scoped attachment,
+                 tool registry, structured ``Report``s (paper §III's
+                 "unified interface to capture and analyze runtime events")
   * annotations: ``pasta.start / pasta.end / pasta.region`` (paper Listing 1)
-  * attachment:  ``pasta.attach()`` (per-process injection analogue)
-  * modules:     EventHandler → EventProcessor → tool collection
+                 — route to the innermost active session
+  * modules:     EventHandler → EventProcessor → tool collection (owned by a
+                 Session; still composable by hand)
   * memory:      MemoryPool (caching-allocator model)
   * artifacts:   hlo (compiled-HLO walker), tools.roofline
+
+Deprecated (shims over the implicit root session): ``pasta.attach()``,
+``pasta.default_handler()``, ``pasta.make_tools()``.
 """
 
 from .annotate import start, end, region, GridIdFilter, current_region
@@ -16,14 +23,19 @@ from .handler import EventHandler, attach, default_handler
 from .pool import MemoryPool, MemoryObject, TensorHandle, CHUNK_ALIGN
 from .processor import (EventProcessor, analyze_access_trace,
                         analyze_hotness_trace, analyze_trace_fused)
+from .session import (Session, Report, Reports, active_session,
+                      current_session, current_handler, root_session)
 from . import hlo
 from . import tools
 from .tools import (PastaTool, KernelFrequencyTool, WorkingSetTool,
                     HotnessTool, MemoryTimelineTool, LocatorTool,
-                    RooflineTool, make_tools)
+                    RooflineTool, TOOL_REGISTRY, register, parse_tool_spec,
+                    resolve_tools, make_tools)
 from .tools import offload, roofline
 
 __all__ = [
+    "Session", "Report", "Reports", "active_session", "current_session",
+    "current_handler", "root_session",
     "start", "end", "region", "GridIdFilter", "current_region",
     "Event", "EventBatch", "EventKind", "EventRing", "COLLECTIVE_OPCODES",
     "take_seqs", "EventHandler", "attach", "default_handler",
@@ -31,6 +43,7 @@ __all__ = [
     "EventProcessor", "analyze_access_trace", "analyze_hotness_trace",
     "analyze_trace_fused", "hlo", "tools", "PastaTool",
     "KernelFrequencyTool", "WorkingSetTool", "HotnessTool",
-    "MemoryTimelineTool", "LocatorTool", "RooflineTool", "make_tools",
+    "MemoryTimelineTool", "LocatorTool", "RooflineTool", "TOOL_REGISTRY",
+    "register", "parse_tool_spec", "resolve_tools", "make_tools",
     "offload", "roofline",
 ]

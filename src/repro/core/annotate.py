@@ -39,18 +39,20 @@ def current_region() -> tuple:
 
 
 def start(name: str) -> None:
-    """Open an analysis region (paper Listing 1, ``pasta.start``)."""
-    from .handler import default_handler
+    """Open an analysis region (paper Listing 1, ``pasta.start``).  The
+    region event routes to the innermost active :class:`~repro.core.Session`
+    (falling back to the implicit root session)."""
+    from .session import current_handler
     from .events import Event, EventKind
 
     _stack().append(name)
-    default_handler().emit(Event(EventKind.REGION_START, name=name,
+    current_handler().emit(Event(EventKind.REGION_START, name=name,
                                  region=current_region()))
 
 
 def end(name: str | None = None) -> None:
     """Close the innermost analysis region (paper Listing 1, ``pasta.end``)."""
-    from .handler import default_handler
+    from .session import current_handler
     from .events import Event, EventKind
 
     stack = _stack()
@@ -60,7 +62,7 @@ def end(name: str | None = None) -> None:
     if name is not None and name != top:
         raise RuntimeError(f"pasta.end({name!r}) does not match open region {top!r}")
     stack.pop()
-    default_handler().emit(Event(EventKind.REGION_END, name=top,
+    current_handler().emit(Event(EventKind.REGION_END, name=top,
                                  region=current_region()))
 
 

@@ -292,6 +292,26 @@ class EventBatch:
     def attrs_at(self, i: int):
         return None if self.attrs is None else self.attrs[i]
 
+    def attr_column(self, key: str, default=0, rows=None,
+                    dtype=None) -> np.ndarray:
+        """Gather one attrs key across the side table as a dense column.
+
+        Returns an ndarray aligned with ``rows`` (all rows when ``None``),
+        filling ``default`` for rows without attrs or without ``key``.  The
+        ``attrs is None`` fast path is a single ``np.full`` — tools never
+        need to special-case batches that carry no side table, and per-row
+        ``attrs_at`` loops collapse to one vectorized gather + array op.
+        """
+        n = len(self) if rows is None else len(rows)
+        if self.attrs is None:
+            return np.full(n, default, dtype=dtype)
+        if rows is None:
+            src = self.attrs
+        else:
+            src = (self.attrs[int(i)] for i in rows)
+        return np.asarray([default if a is None else a.get(key, default)
+                           for a in src], dtype=dtype)
+
     def mask(self, *kinds) -> np.ndarray:
         codes = codes_for(kinds)
         if codes is None:

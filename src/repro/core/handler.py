@@ -292,19 +292,34 @@ class EventHandler:
         return stats
 
 
-_default: EventHandler | None = None
-
+# ---------------------------------------------------------------------------
+# Deprecated process-global surface — thin shims over the implicit root
+# session (see repro.core.session).  New code uses pasta.Session /
+# repro.core.session.current_handler().
+# ---------------------------------------------------------------------------
 
 def default_handler() -> EventHandler:
-    global _default
-    if _default is None:
-        _default = EventHandler()
-    return _default
+    """Deprecated: the old process-global handler accessor.  Now resolves
+    the *current session's* handler (innermost active session, falling back
+    to the implicit root session)."""
+    import warnings
+    warnings.warn(
+        "pasta.default_handler() is deprecated; use pasta.Session (scoped "
+        "pipelines) or repro.core.session.current_handler()",
+        DeprecationWarning, stacklevel=2)
+    from .session import current_handler
+    return current_handler()
 
 
 def attach(handler: EventHandler | None = None) -> EventHandler:
-    """Install ``handler`` as the process-global default (the TPU analogue of
-    the paper's per-process LD_PRELOAD injection)."""
-    global _default
-    _default = handler or EventHandler()
-    return _default
+    """Deprecated: install ``handler`` as the process-global default (the
+    TPU analogue of the paper's per-process LD_PRELOAD injection).  Now
+    replaces the implicit root session's handler; scoped ``with
+    pasta.Session(...)`` blocks are the supported interface."""
+    import warnings
+    warnings.warn(
+        "pasta.attach() is deprecated; use `with pasta.Session(...)` — "
+        "scoped sessions replace the process-global handler",
+        DeprecationWarning, stacklevel=2)
+    from .session import _attach_root
+    return _attach_root(handler)

@@ -34,13 +34,16 @@ ACTIVE: "EagerInstrumenter | None" = None
 
 
 class EagerInstrumenter:
-    def __init__(self, handler, pool: MemoryPool | None = None,
+    def __init__(self, handler=None, pool: MemoryPool | None = None,
                  fine: bool = False, stride: int = 512,
                  max_records_per_op: int = 65536,
                  pool_chunk: int = 32 * 1024 * 1024,
                  pool_align: int | None = None,
                  time_source=None, buffered: bool = False):
         from .pool import CHUNK_ALIGN
+        if handler is None:
+            from .session import current_handler
+            handler = current_handler()
         self.handler = handler
         self.pool = pool or MemoryPool(
             handler, chunk_size=pool_chunk,

@@ -106,8 +106,7 @@ class MemoryPool:
 
     def __init__(self, handler=None, chunk_size: int = 32 * 1024 * 1024,
                  device: tuple = (), align: int = CHUNK_ALIGN):
-        from .handler import default_handler
-        self.handler = handler or default_handler()
+        self._handler = handler
         self.chunk_size = chunk_size
         self.align = align
         self.device = device
@@ -118,6 +117,16 @@ class MemoryPool:
         self._tid = itertools.count()
         self.peak_bytes = 0
         self.live_bytes = 0
+
+    @property
+    def handler(self):
+        """The pool's event sink.  A pool constructed without an explicit
+        handler resolves the innermost active session *at emit time*, so one
+        pool composes with nested/scoped sessions."""
+        if self._handler is not None:
+            return self._handler
+        from .session import current_handler
+        return current_handler()
 
     # ----------------------------------------------------------------- chunks
     def _new_object(self, min_size: int) -> MemoryObject:

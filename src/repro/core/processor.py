@@ -29,7 +29,7 @@ import numpy as np
 
 from .events import (Event, EventBatch, EventKind, KIND_CODE, _SIGNED_CODES,
                      _SIGNED_SIZE_KINDS)
-from .handler import EventHandler, default_handler
+from .handler import EventHandler
 
 _KC_KERNEL = int(KIND_CODE[EventKind.KERNEL_LAUNCH])
 _KC_MEMCPY = int(KIND_CODE[EventKind.MEMCPY])
@@ -42,7 +42,10 @@ class EventProcessor:
         """``hotness``: optional {"base","n_blocks","n_tbins","t_max"} — when
         set, trace buffers are additionally reduced to time×block hotness
         maps (Fig. 13) alongside per-object counts."""
-        self.handler = handler or default_handler()
+        if handler is None:
+            from .session import current_handler
+            handler = current_handler()
+        self.handler = handler
         self.tools = list(tools)
         self.device_analysis = device_analysis
         self.hotness = hotness

@@ -1,14 +1,17 @@
-"""Built-in PASTA tool collection + registry.
+"""Built-in PASTA tool collection + string-keyed registry.
 
-Tool selection follows the paper's CLI/environment interface: set
-``PASTA_TOOL=<name>[,<name>...]`` or pass names to :func:`make_tools`.
+Tools register themselves with the :func:`~repro.core.tools.base.register`
+decorator and are selected by spec string — ``pasta.Session(tools=
+"kernel_freq,timeline")``, knobs via ``"hotness:n_tbins=8,hot_frac=0.75"``,
+or the ``PASTA_TOOL`` environment variable (the paper's CLI interface).
 """
 
 from __future__ import annotations
 
-import os
+import warnings
 
-from .base import PastaTool
+from .base import (PastaTool, TOOL_REGISTRY, register, parse_tool_spec,
+                   resolve_tools)
 from .kernel_freq import KernelFrequencyTool
 from .workingset import WorkingSetTool
 from .hotness import HotnessTool
@@ -18,30 +21,22 @@ from .roofline import RooflineTool
 from . import offload
 from . import roofline
 
-REGISTRY = {
-    "kernel_freq": KernelFrequencyTool,
-    "workingset": WorkingSetTool,
-    "hotness": HotnessTool,
-    "timeline": MemoryTimelineTool,
-    "locator": LocatorTool,
-    "roofline": RooflineTool,
-}
+#: compatibility alias — the registry is populated by @register decorators
+REGISTRY = TOOL_REGISTRY
 
 
 def make_tools(names: str | list | None = None, **kw) -> list:
-    """Instantiate tools by name; default from ``PASTA_TOOL`` env var."""
-    if names is None:
-        names = os.environ.get("PASTA_TOOL", "")
-    if isinstance(names, str):
-        names = [n.strip() for n in names.split(",") if n.strip()]
-    out = []
-    for n in names:
-        if n not in REGISTRY:
-            raise KeyError(f"unknown PASTA tool {n!r}; known: {sorted(REGISTRY)}")
-        out.append(REGISTRY[n](**kw.get(n, {})))
-    return out
+    """Deprecated: instantiate tools by name (old hardcoded-table surface).
+    Use ``pasta.Session(tools=...)`` or :func:`resolve_tools` instead."""
+    warnings.warn(
+        "pasta.make_tools() is deprecated; pass a tool spec to "
+        "pasta.Session(tools=...) or use repro.core.tools.resolve_tools()",
+        DeprecationWarning, stacklevel=2)
+    return resolve_tools(names, overrides=kw)
 
 
 __all__ = ["PastaTool", "KernelFrequencyTool", "WorkingSetTool",
            "HotnessTool", "MemoryTimelineTool", "LocatorTool",
-           "RooflineTool", "offload", "roofline", "REGISTRY", "make_tools"]
+           "RooflineTool", "offload", "roofline", "REGISTRY",
+           "TOOL_REGISTRY", "register", "parse_tool_spec", "resolve_tools",
+           "make_tools"]

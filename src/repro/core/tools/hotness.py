@@ -15,9 +15,10 @@ from __future__ import annotations
 import numpy as np
 
 from ..events import EventKind
-from .base import PastaTool
+from .base import PastaTool, register
 
 
+@register("hotness")
 class HotnessTool(PastaTool):
     EVENTS = (EventKind.TRACE_BUFFER,)
 

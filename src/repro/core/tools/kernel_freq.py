@@ -18,9 +18,10 @@ import collections
 import numpy as np
 
 from ..events import EventKind
-from .base import PastaTool
+from .base import PastaTool, register
 
 
+@register("kernel_freq")
 class KernelFrequencyTool(PastaTool):
     EVENTS = (EventKind.KERNEL_LAUNCH,)
 

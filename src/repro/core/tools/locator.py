@@ -24,9 +24,10 @@ from __future__ import annotations
 import traceback
 
 from ..events import EventKind
-from .base import PastaTool
+from .base import PastaTool, register
 
 
+@register("locator")
 class LocatorTool(PastaTool):
     EVENTS = (EventKind.KERNEL_LAUNCH, EventKind.OPERATOR_START,
               EventKind.REGION_START)

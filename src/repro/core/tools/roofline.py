@@ -97,9 +97,10 @@ def model_flops(n_params: float, n_tokens: float, training: bool = True,
 import numpy as np                                        # noqa: E402
 
 from ..events import EventKind                            # noqa: E402
-from .base import PastaTool                               # noqa: E402
+from .base import PastaTool, register                     # noqa: E402
 
 
+@register("roofline")
 class RooflineTool(PastaTool):
     """Accumulates the three roofline terms from the event stream itself:
     per-chip HBM traffic from KERNEL_LAUNCH batches (``bytes × count``),
@@ -140,21 +141,12 @@ class RooflineTool(PastaTool):
             counts = (batch.counts[kidx] if batch.counts is not None
                       else np.ones(kidx.size, dtype=np.int64))
             self.kernel_invocations += int(counts.sum())
-            if batch.attrs is not None:
-                for j, i in enumerate(kidx):
-                    a = batch.attrs[i]
-                    if a:
-                        self.hbm_bytes += (float(a.get("bytes", 0))
-                                           * float(counts[j]))
+            byts = batch.attr_column("bytes", 0, rows=kidx, dtype=np.float64)
+            self.hbm_bytes += float((byts * counts).sum())
         cidx = batch.rows(EventKind.COLLECTIVE)
         if cidx.size:
-            if batch.attrs is None:
-                self.coll_bytes += float(batch.sizes[cidx].sum())
-            else:
-                for i in cidx:
-                    a = batch.attrs[i]
-                    mult = float(a.get("mult", 1)) if a else 1.0
-                    self.coll_bytes += float(batch.sizes[i]) * mult
+            mult = batch.attr_column("mult", 1, rows=cidx, dtype=np.float64)
+            self.coll_bytes += float((batch.sizes[cidx] * mult).sum())
         for i in batch.rows(EventKind.COMPILE):
             a = batch.attrs_at(int(i))
             if a:

@@ -17,12 +17,13 @@ import collections
 import numpy as np
 
 from ..events import EventKind, KIND_CODE
-from .base import PastaTool
+from .base import PastaTool, register
 
 _KC_TA = int(KIND_CODE[EventKind.TENSOR_ALLOC])
 _KC_TF = int(KIND_CODE[EventKind.TENSOR_FREE])
 
 
+@register("timeline")
 class MemoryTimelineTool(PastaTool):
     EVENTS = (EventKind.TENSOR_ALLOC, EventKind.TENSOR_FREE,
               EventKind.ALLOC, EventKind.FREE, EventKind.STEP_START,

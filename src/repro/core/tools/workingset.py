@@ -18,12 +18,13 @@ from __future__ import annotations
 import numpy as np
 
 from ..events import EventKind, KIND_CODE
-from .base import PastaTool
+from .base import PastaTool, register
 
 _KC_KERNEL = int(KIND_CODE[EventKind.KERNEL_LAUNCH])
 _KC_ALLOC = int(KIND_CODE[EventKind.ALLOC])
 
 
+@register("workingset")
 class WorkingSetTool(PastaTool):
     EVENTS = (EventKind.TENSOR_ALLOC, EventKind.TENSOR_FREE, EventKind.ALLOC,
               EventKind.OPERATOR_START, EventKind.OPERATOR_END,

@@ -203,8 +203,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     except Exception as e:                                  # noqa: BLE001
         cost_d = {"error": str(e)}
 
+    # scoped capture: the compiled artifact flows through a per-cell Session
+    # (kernel/collective events -> kernel_freq tool), no ambient state
     text = compiled.as_text()
-    stats = pasta.hlo.analyze_text(text, default_trip=meta["default_trip"])
+    with pasta.Session(tools="kernel_freq:top_k=5",
+                       name=f"dryrun/{arch}/{shape_name}") as sess:
+        stats = sess.capture_compiled(text, label=f"{arch}.{shape_name}",
+                                      default_trip=meta["default_trip"])
+    kernel_freq = sess.reports()["kernel_freq"].data
 
     n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
                                      else 1)
@@ -229,6 +235,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "collective_total_bytes": stats.total_collective_bytes,
             "n_kernels": len(stats.kernel_counts),
             "n_collectives": len(stats.collective_instances),
+            "top_kernels": kernel_freq["top"],
         },
         "model_flops_total": mf,
         "roofline": rl.as_dict(),

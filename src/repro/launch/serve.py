@@ -47,35 +47,38 @@ def main():
     mesh = jax.make_mesh((d, m), ("data", "model")) if d * m > 1 else None
     set_mesh(mesh)
 
-    handler = pasta.attach()
-    tools = pasta.make_tools(args.pasta_tools) if args.pasta_tools else []
-    proc = pasta.EventProcessor(handler, tools=tools)
+    with pasta.Session(tools=args.pasta_tools, name="serve") as session:
+        params = init_params(jax.random.PRNGKey(args.seed), cfg)
+        engine = ServeEngine(cfg, params,
+                             max_seq=args.prompt_len + args.max_new_tokens,
+                             session=session,
+                             request_tools=args.pasta_tools)
+        rng = np.random.default_rng(args.seed)
+        vocab = max(cfg.vocab_size, 2)
+        prompts = rng.integers(0, vocab, (args.batch, args.prompt_len),
+                               dtype=np.int32)
+        if cfg.frontend == "embed":
+            prompts = rng.standard_normal(
+                (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)
 
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    engine = ServeEngine(cfg, params,
-                         max_seq=args.prompt_len + args.max_new_tokens)
-    rng = np.random.default_rng(args.seed)
-    vocab = max(cfg.vocab_size, 2)
-    prompts = rng.integers(0, vocab, (args.batch, args.prompt_len),
-                           dtype=np.int32)
-    if cfg.frontend == "embed":
-        prompts = rng.standard_normal(
-            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)
-
-    t0 = time.perf_counter()
-    out = engine.generate(prompts, max_new_tokens=args.max_new_tokens,
-                          temperature=args.temperature)
-    dt = time.perf_counter() - t0
-    n_tok = out.shape[0] * out.shape[1]
-    print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s)")
-    print(f"[serve] sample: {out[0][:12].tolist()}")
-    reports = proc.finalize()
-    proc.close()
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, max_new_tokens=args.max_new_tokens,
+                              temperature=args.temperature)
+        dt = time.perf_counter() - t0
+        n_tok = out.shape[0] * out.shape[1]
+        print(f"[serve] generated {out.shape} in {dt:.2f}s "
+              f"({n_tok / dt:.1f} tok/s)")
+        print(f"[serve] sample: {out[0][:12].tolist()}")
+        reports = session.reports()
     for name, rep in reports.items():
-        short = {k: v for k, v in rep.items()
+        short = {k: v for k, v in rep.data.items()
                  if k not in ("series", "top", "by_label")}
         print(f"  {name}: {short}")
+    for req in engine.request_reports:
+        for name, rep in req.items():
+            short = {k: v for k, v in rep.data.items()
+                     if k not in ("series", "top", "by_label")}
+            print(f"  [{rep.session}] {name}: {short}")
     return 0
 
 

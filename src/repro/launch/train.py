@@ -30,7 +30,8 @@ def _parse():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--pasta-tools", default="kernel_freq,timeline",
-                    help="comma list; '' disables")
+                    help="tool spec, e.g. 'kernel_freq,timeline'; knobs via "
+                         "'name:knob=val'; '' disables")
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--data", default="", help="token .bin file (synthetic "
                                                "if empty)")
@@ -65,73 +66,71 @@ def main():
     mesh = jax.make_mesh((d, m), ("data", "model")) if d * m > 1 else None
     set_mesh(mesh)
 
-    handler = pasta.attach()
-    tools = pasta.make_tools(args.pasta_tools) if args.pasta_tools else []
-    proc = pasta.EventProcessor(handler, tools=tools)
+    with pasta.Session(tools=args.pasta_tools, name="train") as session:
+        opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps,
+                            moment_dtype=cfg.opt_moment_dtype,
+                            warmup_steps=max(2, args.steps // 20))
+        step_fn = make_train_step(cfg, opt_cfg,
+                                  microbatches=args.microbatches)
 
-    opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps,
-                        moment_dtype=cfg.opt_moment_dtype,
-                        warmup_steps=max(2, args.steps // 20))
-    step_fn = make_train_step(cfg, opt_cfg, microbatches=args.microbatches)
+        key = jax.random.PRNGKey(args.seed)
+        with pasta.region("init"):
+            params = init_params(key, cfg)
+            opt_state = init_opt_state(params, opt_cfg)
+        if mesh is not None:
+            p_sh, o_sh, _, _ = train_shardings(mesh, cfg, opt_cfg)
+            params = jax.device_put(params, p_sh)
+            opt_state = jax.device_put(opt_state, o_sh)
+            jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+        else:
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
-    key = jax.random.PRNGKey(args.seed)
-    with pasta.region("init"):
-        params = init_params(key, cfg)
-        opt_state = init_opt_state(params, opt_cfg)
-    if mesh is not None:
-        p_sh, o_sh, _, _ = train_shardings(mesh, cfg, opt_cfg)
-        params = jax.device_put(params, p_sh)
-        opt_state = jax.device_put(opt_state, o_sh)
-        jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
-                         out_shardings=(p_sh, o_sh, None),
-                         donate_argnums=(0, 1))
-    else:
-        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          global_batch=args.global_batch, seed=args.seed,
+                          frontend=cfg.frontend, d_model=cfg.d_model)
+        source = make_source(dcfg, args.data or None)
 
-    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-                      global_batch=args.global_batch, seed=args.seed,
-                      frontend=cfg.frontend, d_model=cfg.d_model)
-    source = make_source(dcfg, args.data or None)
+        def place_batch(b):
+            return {k: jax.numpy.asarray(v) for k, v in b.items()}
 
-    def place_batch(b):
-        return {k: jax.numpy.asarray(v) for k, v in b.items()}
+        start = 0
+        if args.resume and args.ckpt_dir:
+            last = ckpt.latest_step(args.ckpt_dir)
+            if last is not None:
+                start, state = ckpt.restore(args.ckpt_dir,
+                                            {"params": params,
+                                             "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                print(f"[train] resumed from step {start}")
 
-    start = 0
-    if args.resume and args.ckpt_dir:
-        last = ckpt.latest_step(args.ckpt_dir)
-        if last is not None:
-            start, state = ckpt.restore(args.ckpt_dir,
-                                        {"params": params,
-                                         "opt": opt_state})
-            params, opt_state = state["params"], state["opt"]
-            print(f"[train] resumed from step {start}")
+        loop = TrainLoop(LoopConfig(total_steps=args.steps,
+                                    ckpt_every=args.ckpt_every,
+                                    ckpt_dir=args.ckpt_dir,
+                                    inject_failure_at=args.inject_failure_at),
+                         jitted, source, place_batch)
 
-    loop = TrainLoop(LoopConfig(total_steps=args.steps,
-                                ckpt_every=args.ckpt_every,
-                                ckpt_dir=args.ckpt_dir,
-                                inject_failure_at=args.inject_failure_at),
-                     jitted, source, place_batch, handler)
+        def metrics_cb(step, mx):
+            print(f"[train] step {step:5d} loss {mx['loss']:.4f} "
+                  f"gnorm {mx['grad_norm']:.3f} lr {mx['lr']:.2e} "
+                  f"({mx['tokens']:.0f} tok)")
 
-    def metrics_cb(step, mx):
-        print(f"[train] step {step:5d} loss {mx['loss']:.4f} "
-              f"gnorm {mx['grad_norm']:.3f} lr {mx['lr']:.2e} "
-              f"({mx['tokens']:.0f} tok)")
+        with pasta.region("train"):
+            params, opt_state, step = loop.run(params, opt_state, start,
+                                               metrics_cb)
 
-    with pasta.region("train"):
-        params, opt_state, step = loop.run(params, opt_state, start,
-                                           metrics_cb)
-
-    # post-run: capture the compiled artifact into the event stream
-    example = place_batch(source.batch_at(0))
-    compiled = jitted.lower(params, opt_state, example).compile()
-    handler.capture_compiled(compiled, label="train_step",
-                             default_trip=cfg.n_layers, steps=step - start)
-    reports = proc.finalize()
-    proc.close()
+        # post-run: capture the compiled artifact into the event stream
+        example = place_batch(source.batch_at(0))
+        compiled = jitted.lower(params, opt_state, example).compile()
+        session.capture_compiled(compiled, label="train_step",
+                                 default_trip=cfg.n_layers,
+                                 steps=step - start)
+        reports = session.reports()
     print("[pasta] tool reports:")
     for name, rep in reports.items():
-        short = {k: v for k, v in rep.items() if k not in ("series", "top",
-                                                           "by_label")}
+        short = {k: v for k, v in rep.data.items()
+                 if k not in ("series", "top", "by_label")}
         print(f"  {name}: {short}")
     if loop.stragglers:
         print(f"[train] straggler steps detected: {loop.stragglers}")

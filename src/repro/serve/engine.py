@@ -5,11 +5,18 @@ The cache layout follows the dry-run cells: KV sequence dim shards over the
 statistics, see models.layers._sdpa_decode); SSM archs carry O(1) recurrent
 state.  Prefill produces the cache directly from the chunked forward; decode
 is one jitted step per token with donated cache.
+
+PASTA instrumentation is *per request*: every ``generate`` call runs inside
+a child :class:`~repro.core.Session` of the engine's session, so each
+request gets isolated tool reports (``request_reports``) while the parent
+session still receives every event for fleet-wide aggregates.
 """
 
 from __future__ import annotations
 
+import collections
 import functools
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -45,11 +52,23 @@ class ServeEngine:
     """Greedy/temperature batched generation over the unified LM."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
-                 handler=None, rng_seed: int = 0):
+                 handler=None, session: "pasta.Session | None" = None,
+                 rng_seed: int = 0, request_tools=None,
+                 max_request_reports: int = 64):
+        """``session``: parent Session for per-request child sessions (the
+        innermost active session when omitted).  ``request_tools``: tool
+        spec instantiated fresh for every request's child session; its
+        reports land in ``request_reports``.  ``handler``: legacy pinned
+        event sink — disables per-request sessions (compat path)."""
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
-        self.handler = handler or pasta.default_handler()
+        self.session = session
+        self._handler = handler
+        self.request_tools = request_tools
+        self.request_reports: collections.deque = collections.deque(
+            maxlen=max_request_reports)
+        self._req_ids = itertools.count()
         self._key = jax.random.PRNGKey(rng_seed)
         self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg))
         self._decode = jax.jit(functools.partial(self._decode_impl, cfg),
@@ -73,23 +92,52 @@ class ServeEngine:
         self._key, k = jax.random.split(self._key)
         return jax.random.categorical(k, logits / temperature, axis=-1)
 
+    @property
+    def handler(self):
+        """The engine's event sink: the pinned legacy handler, the parent
+        session's handler, or the innermost active session's."""
+        if self._handler is not None:
+            return self._handler
+        if self.session is not None:
+            return self.session.handler
+        return pasta.current_handler()
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 16,
                  temperature: float = 0.0) -> np.ndarray:
         """prompts: (B, S) int32 (right-aligned, no padding support needed
         for equal-length batches). Returns (B, max_new_tokens)."""
-        self.handler.operator_start("serve.prefill",
-                                    batch=int(prompts.shape[0]),
-                                    prompt_len=int(prompts.shape[1]))
+        if self._handler is not None:
+            # legacy pinned-handler path: emit directly, no child session
+            return self._generate(self._handler, prompts, max_new_tokens,
+                                  temperature)
+        parent = self.session or pasta.current_session()
+        rid = next(self._req_ids)
+        # tools default to none, NOT the PASTA_TOOL env fallback — a
+        # request pipeline is only built when the engine asked for one
+        with parent.child(tools=self.request_tools or (),
+                          name=f"{parent.name}/request{rid}") as req:
+            out = self._generate(req.handler, prompts, max_new_tokens,
+                                 temperature)
+        if self.request_tools:
+            self.request_reports.append(req.reports())
+        req.close()       # drop the per-request pipeline (reports kept)
+        return out
+
+    def _generate(self, handler, prompts, max_new_tokens: int,
+                  temperature: float) -> np.ndarray:
+        handler.operator_start("serve.prefill",
+                               batch=int(prompts.shape[0]),
+                               prompt_len=int(prompts.shape[1]))
         logits, cache = self._prefill(self.params, jnp.asarray(prompts))
         cache = _pad_cache_to(cache, self.cfg, self.max_seq)
-        self.handler.operator_end("serve.prefill")
+        handler.operator_end("serve.prefill")
         out = []
         tok = self._sample(logits, temperature)
         out.append(tok)
         for i in range(max_new_tokens - 1):
-            self.handler.operator_start("serve.decode", step=i)
+            handler.operator_start("serve.decode", step=i)
             logits, cache = self._decode(self.params, cache, tok[:, None])
             tok = self._sample(logits, temperature)
             out.append(tok)
-            self.handler.operator_end("serve.decode")
+            handler.operator_end("serve.decode")
         return np.asarray(jnp.stack(out, axis=1))

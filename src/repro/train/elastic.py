@@ -41,15 +41,22 @@ class TrainLoop:
                  place_batch, handler=None):
         """``train_step(params, opt, batch) -> (params, opt, metrics)``;
         ``source.batch_at(step)``; ``place_batch(np_batch) -> device batch``.
+        Without an explicit ``handler`` the loop emits through the innermost
+        active :class:`~repro.core.Session` (resolved per emission).
         """
         self.cfg = loop_cfg
         self.train_step = train_step
         self.source = source
         self.place_batch = place_batch
-        self.handler = handler or pasta.default_handler()
+        self._handler = handler
         self.durations: list = []
         self.stragglers = 0
         self.restarts = 0
+
+    @property
+    def handler(self):
+        return (self._handler if self._handler is not None
+                else pasta.current_handler())
 
     # ---------------------------------------------------------------- loop
     def run(self, params, opt_state, start_step: int = 0,

@@ -19,26 +19,28 @@ except ImportError:
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis.strategies"] = _mod.strategies
 
-import repro.core as pasta
 from repro.core import events as _events_mod
-from repro.core import handler as _handler_mod
+from repro.core import session as _session_mod
 
 
 @pytest.fixture(autouse=True)
-def _fresh_event_globals():
-    """Reset the process-global default handler and the Event sequence
-    counter before every test, so outcomes never depend on collection
-    order (a leaked subscriber on the global handler — or a drifting seq
-    counter — made tests order-sensitive before)."""
-    _handler_mod._default = None
+def pasta_root_session():
+    """Open a fresh root Session per test (and reset the Event sequence
+    counter), so outcomes never depend on collection order.  Tests get
+    session-scoped isolation through the public session API instead of
+    poking module globals; anything resolving the ambient PASTA pipeline
+    (``pasta.region``, handler-less pools, the deprecation shims) lands in
+    this per-test root session."""
     _events_mod.reset_seq()
-    yield
+    _session_mod.reset_state()
+    yield _session_mod.root_session()
+    _session_mod.reset_state()
 
 
 @pytest.fixture()
-def handler():
-    """Fresh process-global handler per test (tools subscribe to it)."""
-    return pasta.attach()
+def handler(pasta_root_session):
+    """The per-test root session's handler (tools subscribe to it)."""
+    return pasta_root_session.handler
 
 
 @pytest.fixture()

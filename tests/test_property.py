@@ -109,7 +109,7 @@ def test_compressed_gradient_roundtrip_relative_error(rows, cols, seed):
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.sampled_from(["a", "b", "c"]), max_size=8))
 def test_nested_regions_always_balance(names):
-    h = pasta.attach()
+    h = pasta.current_handler()
     evs = []
     h.subscribe(lambda e: evs.append(e), kinds=("region_start", "region_end"))
     for n in names:

@@ -1,0 +1,354 @@
+"""pasta.Session facade: registry + knob specs, scoped attach, session
+isolation (concurrent + nested), child forwarding, structured reports,
+deprecation shims.
+
+The isolation goldens are strict: a session running concurrently with
+another session over the same workload must produce reports *byte-identical*
+to the same session running alone.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+import repro.core as pasta
+from repro.core import session as S
+from repro.core.events import Event, EventKind, reset_seq
+from repro.core.tools.base import (TOOL_REGISTRY, parse_tool_spec,
+                                   resolve_tools)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: tool set whose reports carry no global sequence numbers — the seq counter
+#: is the one process-global concurrent sessions share, so these reports
+#: must be bit-equal under any interleaving
+ISOLATION_TOOLS = "kernel_freq,workingset,roofline"
+
+
+# ------------------------------------------------------------ registry/spec
+def test_tool_spec_parsing():
+    entries = parse_tool_spec(
+        "kernel_freq,timeline:bins=64,hotness:n_tbins=8,hot_frac=0.75,"
+        "locator")
+    assert entries == [
+        ("kernel_freq", {}),
+        ("timeline", {"bins": 64}),
+        ("hotness", {"n_tbins": 8, "hot_frac": 0.75}),
+        ("locator", {}),
+    ]
+    assert parse_tool_spec("") == []
+    assert parse_tool_spec("a:x=true,y=no,z=1.5e3") == [
+        ("a", {"x": True, "y": False, "z": 1500.0})]
+
+
+def test_tool_spec_errors():
+    with pytest.raises(ValueError):
+        parse_tool_spec("top_k=5")           # knob with no tool
+    with pytest.raises(ValueError):
+        parse_tool_spec(":x=1")              # empty tool name
+    with pytest.raises(KeyError):
+        resolve_tools("no_such_tool")
+
+
+def test_resolve_tools_mixed_forms():
+    inst = pasta.KernelFrequencyTool(top_k=3)
+    tools = resolve_tools([inst, "timeline", pasta.WorkingSetTool,
+                           ("hotness", {"n_tbins": 2})])
+    assert tools[0] is inst
+    assert isinstance(tools[1], pasta.MemoryTimelineTool)
+    assert isinstance(tools[2], pasta.WorkingSetTool)
+    assert tools[3].n_tbins == 2
+    knobs = resolve_tools("kernel_freq:top_k=7")
+    assert knobs[0].top_k == 7
+
+
+def test_register_decorator_round_trip():
+    @pasta.register("session_test_tool")
+    class SessionTestTool(pasta.PastaTool):
+        EVENTS = (EventKind.SYNC,)
+
+        def __init__(self, factor=1, **knobs):
+            super().__init__(**knobs)
+            self.factor = factor
+            self.n = 0
+
+        def on_sync(self, ev):
+            self.n += self.factor
+
+        def finalize(self):
+            return {"n": self.n}
+
+    try:
+        with pasta.Session(tools="session_test_tool:factor=3") as s:
+            s.handler.sync()
+            s.handler.sync()
+        rep = s.reports()["session_test_tool"]
+        assert rep.data == {"n": 6}
+        assert rep.tool_class == "SessionTestTool"
+        # name stealing is rejected
+        with pytest.raises(ValueError):
+            pasta.register("session_test_tool")(pasta.KernelFrequencyTool)
+    finally:
+        del TOOL_REGISTRY["session_test_tool"]
+
+
+# ------------------------------------------------------------------ reports
+def test_reports_typed_mapping_and_json(tmp_path):
+    with pasta.Session(tools="kernel_freq,workingset",
+                       name="json_test") as s:
+        s.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="gemm.1",
+                             attrs={"count": 4}))
+    reports = s.reports()
+    assert sorted(reports) == ["kernel_freq", "workingset"]
+    rep = reports["kernel_freq"]
+    assert isinstance(rep, pasta.Report)
+    assert rep.tool == "kernel_freq" and rep.session == "json_test"
+    assert rep["total_invocations"] == 4          # mapping-style access
+    js = json.loads(rep.to_json())
+    assert js["tool"] == "kernel_freq"
+    assert js["data"]["total_invocations"] == 4
+    # JSONL streaming export round-trips
+    p = tmp_path / "reports.jsonl"
+    assert reports.to_jsonl(p) == 2
+    lines = [json.loads(ln) for ln in p.read_text().splitlines()]
+    assert [ln["tool"] for ln in lines] == ["kernel_freq", "workingset"]
+    assert lines[0]["data"]["total_invocations"] == 4
+    # whole-mapping JSON too
+    assert json.loads(reports.to_json())["workingset"]["tool_class"] \
+        == "WorkingSetTool"
+
+
+def test_duplicate_tool_keys_suffix():
+    with pasta.Session(tools=[pasta.KernelFrequencyTool(),
+                              pasta.KernelFrequencyTool()]) as s:
+        s.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="a"))
+    assert sorted(s.reports()) == ["kernel_freq", "kernel_freq#2"]
+
+
+# ---------------------------------------------------------------- isolation
+def _drive(session, trace=False):
+    """Deterministic workload against one session's pipeline: kernels,
+    pool alloc/free, an operator, a collective.  Pool addresses are
+    pool-local, so the stream is identical no matter what other sessions
+    are doing concurrently."""
+    h = session.handler
+    h.step_start(0)
+    for i in range(8):
+        h.emit(Event(EventKind.KERNEL_LAUNCH, name=f"fusion.{i % 3}",
+                     attrs={"count": i + 1, "bytes": 1 << 20}))
+    pool = pasta.MemoryPool(h, chunk_size=1 << 20)
+    ts = [pool.alloc((i + 1) << 12, f"t{i}") for i in range(5)]
+    h.operator_start("op0", tensors=[(t.addr, t.size) for t in ts[:3]])
+    h.emit(Event(EventKind.COLLECTIVE, name="all-reduce.1", size=1 << 16,
+                 attrs={"mult": 2}))
+    for t in ts[::2]:
+        pool.free(t)
+    h.step_end(0)
+    return session.reports().data
+
+
+def test_concurrent_sessions_byte_identical_to_solo():
+    """Two Sessions running the same workload concurrently (their own
+    threads, overlapping lifetimes) each produce reports byte-identical to
+    a solo run."""
+    reset_seq()
+    with pasta.Session(tools=ISOLATION_TOOLS, name="solo") as solo:
+        golden = _drive(solo)
+
+    reset_seq()
+    sessions = [pasta.Session(tools=ISOLATION_TOOLS, name=f"conc{i}")
+                for i in range(2)]
+    barrier = threading.Barrier(2)
+    out, errs = {}, []
+
+    def run(sess, key):
+        try:
+            with sess:
+                barrier.wait(timeout=10)
+                out[key] = _drive(sess)
+        except Exception as e:                              # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=run, args=(s, i))
+               for i, s in enumerate(sessions)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errs, errs
+    assert out[0] == golden
+    assert out[1] == golden
+
+
+def test_nested_sessions_route_to_innermost():
+    """Ambient emissions (pasta.region, handler-less MemoryPool) land in
+    the innermost active session; outer sessions see nothing from inner
+    scopes."""
+    outer_regions, inner_regions = [], []
+    with pasta.Session(tools="timeline", name="outer") as outer:
+        outer.handler.subscribe(lambda e: outer_regions.append(e.name),
+                                kinds=("region_start",))
+        with pasta.Session(tools="timeline", name="inner") as inner:
+            inner.handler.subscribe(lambda e: inner_regions.append(e.name),
+                                    kinds=("region_start",))
+            with pasta.region("deep"):
+                pool = pasta.MemoryPool()        # ambient -> inner
+                t = pool.alloc(4096)
+                pool.free(t)
+        with pasta.region("shallow"):
+            pass
+    assert inner_regions == ["deep"]
+    assert outer_regions == ["shallow"]
+    inner_tl = inner.reports()["timeline"].data
+    outer_tl = outer.reports()["timeline"].data
+    assert inner_tl["alloc_events"] and not outer_tl["alloc_events"]
+
+
+def test_current_session_falls_back_to_root(pasta_root_session):
+    assert pasta.active_session() is None
+    assert pasta.current_session() is pasta_root_session
+    assert pasta.current_handler() is pasta_root_session.handler
+    with pasta.Session(name="scoped") as s:
+        assert pasta.active_session() is s
+        assert pasta.current_handler() is s.handler
+    assert pasta.active_session() is None
+
+
+def test_closed_session_cannot_reenter():
+    s = pasta.Session(tools="kernel_freq")
+    s.close()
+    with pytest.raises(RuntimeError):
+        with s:
+            pass
+
+
+def test_close_inside_with_block_is_safe():
+    """close() mid-scope must not break __exit__ (or mask the body's
+    exception with an IndexError)."""
+    with pasta.Session(tools="kernel_freq") as s:
+        s.close()
+    assert s.closed and pasta.active_session() is None
+
+
+def test_unregistered_subclass_keyed_by_class_name():
+    """A subclass of a registered tool inherits REGISTRY_NAME but is not
+    itself registered — its report must be keyed by its own class name."""
+    class MyKernelTool(pasta.KernelFrequencyTool):
+        pass
+
+    with pasta.Session(tools=[MyKernelTool(), pasta.KernelFrequencyTool()]) \
+            as s:
+        s.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="a"))
+    assert sorted(s.reports()) == ["MyKernelTool", "kernel_freq"]
+
+
+# ----------------------------------------------------------- child sessions
+def test_child_session_isolated_reports_and_forwarding():
+    with pasta.Session(tools="kernel_freq", name="parent") as parent:
+        with parent.child(tools="kernel_freq", name="req0") as c0:
+            c0.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="a",
+                                  attrs={"count": 2}))
+        with parent.child(tools="kernel_freq", name="req1") as c1:
+            c1.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="b",
+                                  attrs={"count": 5}))
+    # children are isolated from each other...
+    assert c0.reports()["kernel_freq"]["total_invocations"] == 2
+    assert c1.reports()["kernel_freq"]["total_invocations"] == 5
+    # ...while the parent aggregates both (forwarded batches)
+    assert parent.reports()["kernel_freq"]["total_invocations"] == 7
+    assert [c.name for c in parent.children] == ["req0", "req1"]
+
+
+def test_serve_engine_per_request_child_sessions():
+    import repro.configs as C
+    from repro.models import init_params
+    from repro.serve import ServeEngine
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(__import__("jax").random.PRNGKey(0), cfg)
+    ops = []
+    with pasta.Session(name="engine", tools="kernel_freq") as sess:
+        sess.handler.subscribe(lambda e: ops.append(e.name),
+                               kinds=("operator_start",))
+        eng = ServeEngine(cfg, params, max_seq=24, session=sess,
+                          request_tools="kernel_freq")
+        out = eng.generate(np.zeros((2, 8), dtype=np.int32),
+                           max_new_tokens=4)
+        eng.generate(np.zeros((2, 8), dtype=np.int32), max_new_tokens=2)
+    assert out.shape == (2, 4)
+    # per-request children forwarded their operator events to the parent
+    assert ops.count("serve.prefill") == 2
+    assert ops.count("serve.decode") == (4 - 1) + (2 - 1)
+    # one isolated report set per request
+    assert len(eng.request_reports) == 2
+    names = [rep.session for req in eng.request_reports
+             for rep in req.values()]
+    assert names == ["engine/request0", "engine/request1"]
+    # request children are closed after report collection, so a long-lived
+    # engine session never accumulates per-request pipelines
+    assert sess.children == []
+
+
+def test_child_default_ignores_pasta_tool_env(monkeypatch):
+    """Children (and so per-request engine sessions) must not silently
+    build pipelines from the PASTA_TOOL environment default."""
+    monkeypatch.setenv("PASTA_TOOL", "workingset")
+    with pasta.Session(tools="kernel_freq", name="p") as p:
+        with p.child(name="c") as c:
+            pass
+    assert c.tools == []
+    # explicit None at the Session level still honors the env (CLI parity)
+    s = pasta.Session()
+    assert [type(t).__name__ for t in s.tools] == ["WorkingSetTool"]
+    s.close()
+
+
+# ------------------------------------------------------------------- shims
+def test_deprecated_shims_still_work():
+    with pytest.warns(DeprecationWarning, match="pasta.attach"):
+        h = pasta.attach()
+    assert h is S.root_session().handler
+    with pytest.warns(DeprecationWarning, match="pasta.default_handler"):
+        h2 = pasta.default_handler()
+    assert h2 is h
+    with pytest.warns(DeprecationWarning, match="pasta.make_tools"):
+        tools = pasta.make_tools("kernel_freq,timeline")
+    assert [type(t).__name__ for t in tools] == ["KernelFrequencyTool",
+                                                 "MemoryTimelineTool"]
+    # the shimmed wiring still functions end to end
+    with pytest.warns(DeprecationWarning):
+        handler = pasta.attach()
+    proc = pasta.EventProcessor(handler, tools=tools)
+    handler.emit(Event(EventKind.KERNEL_LAUNCH, name="x", attrs={"count": 3}))
+    assert proc.finalize()["KernelFrequencyTool"]["total_invocations"] == 3
+    proc.close()
+
+
+def test_shim_attach_respects_innermost_session():
+    """default_handler() inside a session scope resolves that session —
+    legacy emit sites compose with scoped sessions."""
+    with pasta.Session(name="scoped") as s:
+        with pytest.warns(DeprecationWarning):
+            assert pasta.default_handler() is s.handler
+
+
+# ------------------------------------------------------------ end-to-end
+def test_quickstart_example_runs_session_only():
+    """Acceptance: examples/quickstart.py runs end-to-end on pasta.Session
+    alone — with pasta deprecation warnings escalated to errors, proving it
+    never touches attach()/default_handler()/make_tools()."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["PYTHONWARNINGS"] = "error:pasta:DeprecationWarning::"
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "quickstart.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr
+    assert "kernel_freq: total=" in r.stdout
+    assert "workingset:" in r.stdout
+    assert "timeline: peak=" in r.stdout

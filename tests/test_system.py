@@ -32,8 +32,9 @@ def _setup(arch="paper-gpt2", steps=12, seq=64, batch=4, **loop_kw):
     src = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
                                      global_batch=batch))
     place = lambda b: {k: jnp.asarray(v) for k, v in b.items()}  # noqa: E731
+    # no handler passed: the loop resolves the innermost active session
     loop = TrainLoop(LoopConfig(total_steps=steps, **loop_kw), step, src,
-                     place, pasta.attach())
+                     place)
     return cfg, params, opt, loop
 
 
