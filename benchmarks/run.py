@@ -4,28 +4,68 @@ Prints ``name,us_per_call,derived`` CSV rows; detailed payloads land in
 ``results/bench/*.json``.  Paper artifacts covered: Fig. 7, Table V,
 Fig. 9, Fig. 10, Figs. 11-12, Fig. 13, Fig. 14, Fig. 15 (see DESIGN.md §5
 for the artifact → reproduction mapping).
+
+``--smoke`` runs the CI subset — the Fig. 9 overhead/dispatch sweep (with
+its report-parity and ≥10× dispatch-speedup asserts) and the Fig. 15
+exposed-cross-pod-comm sweep (overlapped vs blocking sync, O(1) wire
+bytes) — and snapshots their payloads to ``BENCH_fig9.json`` /
+``BENCH_fig15.json`` at the repo root, so the perf trajectory is recorded
+per PR.  The full run refreshes the same snapshots.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import shutil
 import sys
 import traceback
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.join(REPO, "results", "bench")
+
+#: results/bench payload -> repo-root snapshot recording the perf trajectory
+SNAPSHOTS = {
+    "fig9_overhead.json": "BENCH_fig9.json",
+    "fig15_exposed_comm.json": "BENCH_fig15.json",
+}
+
+
+def snapshot() -> list:
+    out = []
+    for src, dst in SNAPSHOTS.items():
+        path = os.path.join(BENCH_DIR, src)
+        if os.path.exists(path):
+            with open(path) as f:
+                json.load(f)                  # refuse to snapshot junk
+            shutil.copyfile(path, os.path.join(REPO, dst))
+            out.append(dst)
+    return out
+
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv
     from . import (fig7_kernel_freq, tablev_workingset, fig9_overhead,
                    fig10_breakdown, fig11_12_offload, fig13_hotness,
                    fig14_timeline, fig15_parallelism)
-    benches = [
-        ("fig7", fig7_kernel_freq.main),
-        ("tablev", tablev_workingset.main),
-        ("fig9", fig9_overhead.main),
-        ("fig10", fig10_breakdown.main),
-        ("fig11_12", fig11_12_offload.main),
-        ("fig13", fig13_hotness.main),
-        ("fig14", fig14_timeline.main),
-        ("fig15", fig15_parallelism.main),
-    ]
+    if smoke:
+        benches = [
+            ("fig9", lambda: fig9_overhead.main(
+                sizes=fig9_overhead.SMOKE_SIZES,
+                dispatch_sizes=fig9_overhead.SMOKE_DISPATCH_SIZES)),
+            ("fig15_exposed_comm", fig15_parallelism.exposed_comm),
+        ]
+    else:
+        benches = [
+            ("fig7", fig7_kernel_freq.main),
+            ("tablev", tablev_workingset.main),
+            ("fig9", fig9_overhead.main),
+            ("fig10", fig10_breakdown.main),
+            ("fig11_12", fig11_12_offload.main),
+            ("fig13", fig13_hotness.main),
+            ("fig14", fig14_timeline.main),
+            ("fig15", fig15_parallelism.main),
+        ]
     print("name,us_per_call,derived")
     failures = []
     for name, fn in benches:
@@ -34,6 +74,8 @@ def main() -> None:
         except Exception:                                   # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
+    written = snapshot()
+    print(f"snapshots: {written}", file=sys.stderr)
     if failures:
         print(f"FAILED benches: {failures}", file=sys.stderr)
         sys.exit(1)

@@ -216,12 +216,18 @@ class EventBatch:
             if names is None:
                 name_ids = np.zeros(n, dtype=np.int32)
                 name_table = [""]
-            else:
+            elif n == 0:
+                name_ids = np.zeros(0, dtype=np.int32)
                 name_table = []
-                index: dict = {}
-                name_ids = np.empty(n, dtype=np.int32)
-                for i, nm in enumerate(names):
-                    name_ids[i] = _intern(nm, name_table, index)
+            else:
+                # vectorized dictionary encoding: one np.unique pass over a
+                # fixed-width string array instead of a per-row _intern loop
+                # (the table comes out sorted rather than
+                # first-appearance-ordered — ids are opaque)
+                uniq, inverse = np.unique(np.asarray(names),
+                                          return_inverse=True)
+                name_table = uniq.tolist()
+                name_ids = inverse.astype(np.int32)
         else:
             name_ids = np.asarray(name_ids, dtype=np.int32)
             name_table = list(name_table if name_table is not None else [])

@@ -288,7 +288,11 @@ class EventHandler:
                             attrs={"opcode": inst["opcode"],
                                    "mult": inst["mult"] * steps,
                                    "group_size": inst["group_size"],
-                                   "label": label}))
+                                   "label": label,
+                                   "overlapped": inst["overlapped"],
+                                   "exposed_bytes": inst["exposed_bytes"],
+                                   "hidden_s": inst["hidden_s"],
+                                   "wire_bytes": inst["wire_bytes"]}))
         return stats
 
 

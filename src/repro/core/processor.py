@@ -32,7 +32,6 @@ from .events import (Event, EventBatch, EventKind, KIND_CODE, _SIGNED_CODES,
 from .handler import EventHandler
 
 _KC_KERNEL = int(KIND_CODE[EventKind.KERNEL_LAUNCH])
-_KC_MEMCPY = int(KIND_CODE[EventKind.MEMCPY])
 _KC_TRACE = int(KIND_CODE[EventKind.TRACE_BUFFER])
 
 
@@ -89,8 +88,12 @@ class EventProcessor:
     @staticmethod
     def normalize_batch(batch: EventBatch) -> EventBatch:
         """Vectorized normalization over a columnar batch: masked negation
-        for the signed-size kinds, a materialized ``counts`` column for
-        kernel launches (default-attr fill), memcpy direction defaults."""
+        for the signed-size kinds and a materialized ``counts`` column for
+        kernel launches.  Fully columnar — one ``attr_column`` gather
+        instead of per-row attrs loops (this sits on the hot dispatch path
+        for every batch that carries attrs); default attrs (``count``,
+        memcpy ``direction``) are supplied by :meth:`EventBatch.event` at
+        scalar materialization rather than written back per row."""
         if batch.normalized:
             return batch
         kinds = batch.kinds
@@ -99,16 +102,10 @@ class EventProcessor:
             batch.sizes = np.where(signed & (batch.sizes < 0),
                                    -batch.sizes, batch.sizes)
         counts = np.ones(len(batch), dtype=np.int64)
-        if batch.attrs is not None:
-            for i in np.nonzero(kinds == _KC_KERNEL)[0]:
-                a = batch.attrs[i]
-                if a:
-                    counts[i] = int(a.get("count", 1))
-                    a.setdefault("count", 1)
-            for i in np.nonzero(kinds == _KC_MEMCPY)[0]:
-                a = batch.attrs[i]
-                if a is not None:
-                    a.setdefault("direction", "d2d")
+        kidx = np.nonzero(kinds == _KC_KERNEL)[0]
+        if kidx.size and batch.attrs is not None:
+            counts[kidx] = batch.attr_column("count", 1, rows=kidx,
+                                             dtype=np.int64)
         batch.counts = counts
         batch.normalized = True
         return batch
@@ -122,6 +119,10 @@ class EventProcessor:
             ev = batch.event(0)
             self.normalize(ev)
             batch.sizes[0] = ev.size
+            # keep the columnar view consistent with normalize_batch: batch
+            # consumers must see the counts column on normalized batches
+            batch.counts = np.asarray([int(ev.attrs.get("count", 1))],
+                                      dtype=np.int64)
             batch.normalized = True
             if ev.kind is EventKind.TRACE_BUFFER:
                 self._preprocess_trace(ev)

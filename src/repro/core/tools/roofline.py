@@ -20,7 +20,10 @@ import dataclasses
 V5E = {
     "peak_flops": 197e12,      # bf16 FLOP/s per chip
     "hbm_bw": 819e9,           # bytes/s per chip
-    "ici_bw": 50e9,            # bytes/s per ICI link
+    "ici_bw": 50e9,            # bytes/s per ICI link (intra-pod)
+    "dci_bw": 12.5e9,          # bytes/s inter-pod (DCI — the slow link the
+                               # compressed/overlapped pod sync targets)
+    "ici_latency": 1e-6,       # per-collective launch/sync latency (alpha)
     "hbm_bytes": 16 * 1024**3, # capacity per chip
 }
 

@@ -13,9 +13,13 @@ Three orthogonal layers, consumed by models / trainer / serving / dry-run:
     constraint — a no-op without a registered mesh.
 
 ``collectives``
-    int8-compressed cross-pod gradient sync: ``quantize_int8`` /
-    ``dequantize_int8``, ``plain_psum`` / ``compressed_psum``, and
-    ``make_pod_sync(mesh, compressed=)`` over the "pod" axis.
+    int8-compressed + async cross-pod gradient sync: ``quantize_int8`` /
+    ``dequantize_int8``, ``plain_psum`` / ``compressed_psum`` (quantized
+    reduce-scatter + all-gather, O(1) wire bytes in pod count), the
+    bucketed async primitives ``psum_start`` / ``psum_wait``, and
+    ``make_pod_sync(mesh, compressed=)`` over the "pod" axis (the blocking
+    baseline; the overlapped pipeline lives in
+    ``repro.train.trainer.make_overlapped_pod_sync``).
 
 ``pipeline``
     GPipe-style microbatch pipeline parallelism over a "pipe" axis
@@ -24,8 +28,9 @@ Three orthogonal layers, consumed by models / trainer / serving / dry-run:
 """
 
 from . import collectives, pipeline, sharding
-from .collectives import (compressed_psum, dequantize_int8, make_pod_sync,
-                          plain_psum, quantize_int8)
+from .collectives import (PsumHandle, compressed_psum, dequantize_int8,
+                          make_pod_sync, plain_psum, psum_start, psum_wait,
+                          quantize_int8)
 from .pipeline import make_pipelined_fn
 from .sharding import (DEFAULT_RULES, ShardingRules, get_mesh, get_rules,
                        logical, mesh_axis_size, set_mesh, shard)
@@ -35,5 +40,6 @@ __all__ = [
     "DEFAULT_RULES", "ShardingRules", "get_mesh", "get_rules", "logical",
     "mesh_axis_size", "set_mesh", "shard",
     "quantize_int8", "dequantize_int8", "plain_psum", "compressed_psum",
+    "PsumHandle", "psum_start", "psum_wait",
     "make_pod_sync", "make_pipelined_fn",
 ]

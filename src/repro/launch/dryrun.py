@@ -97,23 +97,34 @@ def _sharded_bytes(shapes_tree, shardings_tree) -> int:
 # cell builders
 # ---------------------------------------------------------------------------
 
-def build_cell(cfg: ModelConfig, shape, mesh):
-    """Returns (jitted_fn, kwargs_of_ShapeDtypeStructs, meta)."""
+def build_cell(cfg: ModelConfig, shape, mesh, overlap_sync=None):
+    """Returns (jitted_fn, kwargs_of_ShapeDtypeStructs, meta).
+
+    ``overlap_sync``: ``None`` keeps the partitioner-implicit pod
+    reduction; ``False``/``True`` compile the explicit blocking / bucketed-
+    overlap cross-pod sync (batch replicated across pods — see
+    :mod:`repro.train.trainer`)."""
     set_mesh(mesh)
     meta = {"microbatches": 1}
+    include_pod = overlap_sync is None
     if shape.kind == "train":
         opt_cfg = _opt_cfg(cfg)
         micro = shape.microbatches
         # keep per-microbatch batch divisible by the dp axes
-        dp = mesh.shape.get("pod", 1) * mesh.shape["data"]
+        dp = mesh.shape["data"]
+        if include_pod:
+            dp *= mesh.shape.get("pod", 1)
         while micro > 1 and (shape.global_batch // micro) % dp:
             micro //= 2
         meta["microbatches"] = micro
-        step = trainer.make_train_step(cfg, opt_cfg, microbatches=micro)
+        meta["overlap_sync"] = overlap_sync
+        step = trainer.make_train_step(cfg, opt_cfg, microbatches=micro,
+                                       overlap_sync=overlap_sync)
         p_sh, o_sh, p_shapes, o_shapes = trainer.train_shardings(
             mesh, cfg, opt_cfg)
         specs = input_specs(cfg, shape)
-        b_sh = trainer.batch_shardings(mesh, specs)
+        b_sh = trainer.batch_shardings(mesh, specs,
+                                       include_pod=include_pod)
         fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                      out_shardings=(p_sh, o_sh, None),
                      donate_argnums=(0, 1))
@@ -156,7 +167,8 @@ def build_cell(cfg: ModelConfig, shape, mesh):
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              rules_patch: dict | None = None, tag: str = "",
              cfg_overrides: dict | None = None,
-             microbatches: int | None = None) -> dict:
+             microbatches: int | None = None,
+             overlap_sync: bool | None = None) -> dict:
     import dataclasses
     cfg = configs.get(arch)
     if cfg_overrides:
@@ -176,7 +188,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         set_mesh(mesh, rules)
     chips = n_chips(mesh)
     t0 = time.time()
-    fn, args, meta = build_cell(cfg, shape, mesh)
+    fn, args, meta = build_cell(cfg, shape, mesh, overlap_sync=overlap_sync)
     if isinstance(args, tuple):
         lowered = fn.lower(*args)
     else:
@@ -233,10 +245,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "hbm_bytes_per_device": stats.hbm_bytes,
             "collective_bytes_per_device": stats.collective_bytes,
             "collective_total_bytes": stats.total_collective_bytes,
+            "collective_wire_bytes_per_device": stats.collective_wire_bytes,
+            "collective_wire_total_bytes": stats.total_wire_bytes,
+            "exposed_collective_bytes": stats.exposed_collective_bytes,
+            "exposed_collective_s": stats.exposed_collective_s,
+            "hidden_collective_s": stats.hidden_collective_s,
             "n_kernels": len(stats.kernel_counts),
             "n_collectives": len(stats.collective_instances),
             "top_kernels": kernel_freq["top"],
         },
+        "overlap_sync": overlap_sync,
         "model_flops_total": mf,
         "roofline": rl.as_dict(),
         "tag": tag,
@@ -264,6 +282,11 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--micro", type=int, default=None,
                     help="override train microbatch count")
+    ap.add_argument("--overlap-sync", default="auto",
+                    choices=("auto", "blocking", "overlap"),
+                    help="cross-pod gradient sync: partitioner-implicit "
+                         "(auto), explicit blocking all-reduce, or the "
+                         "bucketed psum_start/psum_wait overlap pipeline")
     ap.add_argument("--set", action="append", default=[],
                     help="ModelConfig override key=value (perf knobs)")
     args = ap.parse_args()
@@ -306,7 +329,9 @@ def main():
         try:
             out = run_cell(arch, shape, args.multi_pod, tag=args.tag,
                            cfg_overrides=overrides or None,
-                           microbatches=args.micro)
+                           microbatches=args.micro,
+                           overlap_sync={"auto": None, "blocking": False,
+                                         "overlap": True}[args.overlap_sync])
         except Exception as e:                              # noqa: BLE001
             out = {"arch": arch, "shape": shape, "mesh": mesh_tag,
                    "status": "error", "error": str(e),

@@ -25,7 +25,17 @@ def _parse():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="1x1",
-                    help="DxM data×model mesh, e.g. 2x4")
+                    help="DxM data×model mesh (e.g. 2x4) or PxDxM "
+                         "pod×data×model (e.g. 2x2x2)")
+    ap.add_argument("--overlap-sync", default="auto",
+                    choices=("auto", "blocking", "overlap"),
+                    help="cross-pod gradient sync on a PxDxM mesh: "
+                         "partitioner-implicit (auto), explicit blocking "
+                         "all-reduce at step end, or the bucketed "
+                         "psum_start/psum_wait overlap pipeline")
+    ap.add_argument("--sync-compressed", action="store_true",
+                    help="int8 quantized reduce-scatter + all-gather for "
+                         "the explicit cross-pod sync")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
@@ -62,16 +72,21 @@ def main():
     if args.reduced:
         cfg = configs.reduced(cfg)
 
-    d, m = (int(x) for x in args.mesh.split("x"))
-    mesh = jax.make_mesh((d, m), ("data", "model")) if d * m > 1 else None
+    dims = tuple(int(x) for x in args.mesh.split("x"))
+    axes = ("pod", "data", "model")[-len(dims):]
+    mesh = jax.make_mesh(dims, axes) if np.prod(dims) > 1 else None
     set_mesh(mesh)
+    overlap_sync = {"auto": None, "blocking": False,
+                    "overlap": True}[args.overlap_sync]
 
     with pasta.Session(tools=args.pasta_tools, name="train") as session:
         opt_cfg = OptConfig(lr=args.lr, total_steps=args.steps,
                             moment_dtype=cfg.opt_moment_dtype,
                             warmup_steps=max(2, args.steps // 20))
         step_fn = make_train_step(cfg, opt_cfg,
-                                  microbatches=args.microbatches)
+                                  microbatches=args.microbatches,
+                                  overlap_sync=overlap_sync,
+                                  sync_compressed=args.sync_compressed)
 
         key = jax.random.PRNGKey(args.seed)
         with pasta.region("init"):

@@ -93,11 +93,18 @@ def global_norm(tree):
                         for x in leaves))
 
 
-def adamw_update(params, grads, state, cfg: OptConfig):
-    """Returns (new_params, new_state, metrics)."""
+def adamw_update(params, grads, state, cfg: OptConfig, grad_sqnorm=None):
+    """Returns (new_params, new_state, metrics).
+
+    ``grad_sqnorm``: optional precomputed ``sum(g**2)`` over the whole tree —
+    the overlapped pod sync accumulates it per bucket while later buckets'
+    collectives are in flight, so the optimizer boundary doesn't redo the
+    full-tree reduction.
+    """
     step = state["step"] + 1
     lr = lr_schedule(step, cfg)
-    gnorm = global_norm(grads)
+    gnorm = (jnp.sqrt(grad_sqnorm) if grad_sqnorm is not None
+             else global_norm(grads))
     clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
     b1, b2 = cfg.b1, cfg.b2
     bc1 = 1 - b1 ** step.astype(jnp.float32)
