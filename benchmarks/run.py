@@ -28,6 +28,7 @@ BENCH_DIR = os.path.join(REPO, "results", "bench")
 SNAPSHOTS = {
     "fig9_overhead.json": "BENCH_fig9.json",
     "fig15_exposed_comm.json": "BENCH_fig15.json",
+    "fig_serve.json": "BENCH_serve.json",
 }
 
 
@@ -47,13 +48,14 @@ def main() -> None:
     smoke = "--smoke" in sys.argv
     from . import (fig7_kernel_freq, tablev_workingset, fig9_overhead,
                    fig10_breakdown, fig11_12_offload, fig13_hotness,
-                   fig14_timeline, fig15_parallelism)
+                   fig14_timeline, fig15_parallelism, fig_serve)
     if smoke:
         benches = [
             ("fig9", lambda: fig9_overhead.main(
                 sizes=fig9_overhead.SMOKE_SIZES,
                 dispatch_sizes=fig9_overhead.SMOKE_DISPATCH_SIZES)),
             ("fig15_exposed_comm", fig15_parallelism.exposed_comm),
+            ("fig_serve", fig_serve.main),
         ]
     else:
         benches = [
@@ -65,6 +67,7 @@ def main() -> None:
             ("fig13", fig13_hotness.main),
             ("fig14", fig14_timeline.main),
             ("fig15", fig15_parallelism.main),
+            ("fig_serve", fig_serve.main),
         ]
     print("name,us_per_call,derived")
     failures = []

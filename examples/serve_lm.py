@@ -1,5 +1,5 @@
-"""Batched serving example: prefill + decode over the unified LM with PASTA
-operator events per phase.
+"""Serving example: an open-loop request trace through the continuous-
+batching ServeEngine, with per-request + fleet PASTA reports.
 
     PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-7b]
 """
@@ -13,12 +13,15 @@ from repro.launch import serve as serve_driver
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=24)
     args, rest = ap.parse_known_args()
 
     sys.argv = ["serve_lm", "--arch", args.arch, "--reduced",
-                "--batch", str(args.batch), "--prompt-len", "32",
+                "--num-requests", str(args.num_requests),
+                "--max-slots", "4", "--rate", "2",
+                "--prompt-len", "32", "--shared-prefix", "16",
+                "--prefix-block", "8",
                 "--max-new-tokens", str(args.max_new_tokens),
                 "--temperature", "0.8"] + rest
     return serve_driver.main()

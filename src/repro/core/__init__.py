@@ -29,7 +29,8 @@ from . import hlo
 from . import tools
 from .tools import (PastaTool, KernelFrequencyTool, WorkingSetTool,
                     HotnessTool, MemoryTimelineTool, LocatorTool,
-                    RooflineTool, TOOL_REGISTRY, register, parse_tool_spec,
+                    RooflineTool, ServingTool, TOOL_REGISTRY, register,
+                    parse_tool_spec,
                     resolve_tools, make_tools)
 from .tools import offload, roofline
 
@@ -43,7 +44,8 @@ __all__ = [
     "EventProcessor", "analyze_access_trace", "analyze_hotness_trace",
     "analyze_trace_fused", "hlo", "tools", "PastaTool",
     "KernelFrequencyTool", "WorkingSetTool", "HotnessTool",
-    "MemoryTimelineTool", "LocatorTool", "RooflineTool", "TOOL_REGISTRY",
+    "MemoryTimelineTool", "LocatorTool", "RooflineTool", "ServingTool",
+    "TOOL_REGISTRY",
     "register", "parse_tool_spec", "resolve_tools", "make_tools",
     "offload", "roofline",
 ]

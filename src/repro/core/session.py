@@ -321,11 +321,17 @@ class Session:
 
     # ----------------------------------------------------------- lifecycle
     def close(self) -> None:
-        """Detach the pipeline.  Reports stay readable after close; closed
-        children drop out of their parent's ``children`` list (long-lived
-        parents never accumulate per-request pipelines)."""
+        """Detach the pipeline.  Idempotent — the serving engine (and any
+        ``with`` + explicit-close pattern) may close a session that already
+        exited its context, or close it twice.  Pending ring rows flush
+        BEFORE the processor detaches, so a buffered session closed without
+        exiting its context still delivers every event to its tools (and
+        forwards them to its parent).  Reports stay readable after close;
+        closed children drop out of their parent's ``children`` list
+        (long-lived parents never accumulate per-request pipelines)."""
         if self.closed:
             return
+        self.handler.flush()
         while self._tokens:
             _CURRENT.reset(self._tokens.pop())
         if self._forward_handler is not None:

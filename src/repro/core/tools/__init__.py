@@ -18,6 +18,7 @@ from .hotness import HotnessTool
 from .timeline import MemoryTimelineTool
 from .locator import LocatorTool
 from .roofline import RooflineTool
+from .serving import ServingTool
 from . import offload
 from . import roofline
 
@@ -37,6 +38,6 @@ def make_tools(names: str | list | None = None, **kw) -> list:
 
 __all__ = ["PastaTool", "KernelFrequencyTool", "WorkingSetTool",
            "HotnessTool", "MemoryTimelineTool", "LocatorTool",
-           "RooflineTool", "offload", "roofline", "REGISTRY",
+           "RooflineTool", "ServingTool", "offload", "roofline", "REGISTRY",
            "TOOL_REGISTRY", "register", "parse_tool_spec", "resolve_tools",
            "make_tools"]

@@ -1,0 +1,157 @@
+"""Serving-lifecycle tool: TTFT/TPOT, batch occupancy, prefix-hit rate.
+
+Consumes the operator events the request-lifecycle :class:`~repro.serve.
+engine.ServeEngine` emits — per-request lifecycle markers
+(``serve.request.submit`` / ``.admit`` / ``.first_token`` / ``.finish``,
+emitted through each request's child session and forwarded to the parent)
+and fused phase spans (``serve.prefill`` / ``serve.decode`` on the engine
+session) — and reduces them to the serving quantities a continuous-batching
+deployment is judged on:
+
+  * **TTFT** (time to first token: submit → first sampled token) and
+    **TPOT** (time per output token over the decode tail), as mean/p50/p90,
+  * the **batch-occupancy timeline** (active slots per fused decode tick)
+    and its mean — decode goodput relative to the slot budget,
+  * **prefix-cache reuse**: hit rate over admissions and the fraction of
+    prompt tokens skipped at prefill.
+
+Attached to the engine's parent session it reports the fleet view; attached
+to a request's child session (``request_tools="serving"``) it reports that
+one request's lifecycle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..events import EventKind
+from .base import PastaTool, register
+
+
+def _pctl(xs: list) -> dict | None:
+    if not xs:
+        return None
+    a = np.asarray(xs, np.float64)
+    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+            "p90": float(np.percentile(a, 90)), "max": float(a.max())}
+
+
+@register("serving")
+class ServingTool(PastaTool):
+    EVENTS = (EventKind.OPERATOR_START, EventKind.OPERATOR_END)
+
+    def __init__(self, timeline_limit: int = 512, **knobs):
+        super().__init__(**knobs)
+        self.timeline_limit = timeline_limit
+        self.req: dict = {}                # rid -> lifecycle dict
+        self.decode_steps = 0
+        self.occupancy_sum = 0
+        self.occupancy_max = 0
+        self.slots = 0
+        self.prefill_events = 0
+        self.prefill_tokens = 0
+        self.cached_tokens = 0
+        self.timeline: list = []           # (time, phase, active)
+        self._t0: float | None = None
+
+    # ------------------------------------------------------------- lifecycle
+    def _entry(self, rid) -> dict:
+        return self.req.setdefault(int(rid), {})
+
+    def on_operator_start(self, ev):
+        a = ev.attrs
+        if self._t0 is None:
+            self._t0 = ev.time
+        name = ev.name
+        if name == "serve.request.submit":
+            e = self._entry(a["rid"])
+            e["submit"] = ev.time
+            e["prompt_len"] = int(a.get("prompt_len", 0))
+        elif name == "serve.request.admit":
+            e = self._entry(a["rid"])
+            e["admit"] = ev.time
+            e["cached"] = int(a.get("cached_tokens", 0))
+            e["slot"] = a.get("slot")
+        elif name == "serve.request.first_token":
+            self._entry(a["rid"])["first"] = ev.time
+        elif name == "serve.request.finish":
+            e = self._entry(a["rid"])
+            e["finish"] = ev.time
+            e["n_tokens"] = int(a.get("n_tokens", 0))
+        elif name == "serve.decode":
+            active = int(a.get("active", 0))
+            self.decode_steps += 1
+            self.occupancy_sum += active
+            self.occupancy_max = max(self.occupancy_max, active)
+            self.slots = int(a.get("slots", self.slots))
+            if len(self.timeline) < self.timeline_limit:
+                self.timeline.append((ev.time - self._t0, "decode", active))
+        elif name == "serve.prefill":
+            self.prefill_events += 1
+            self.prefill_tokens += int(a.get("n_tokens", 0))
+            self.cached_tokens += int(a.get("cached", 0))
+            if len(self.timeline) < self.timeline_limit:
+                self.timeline.append((ev.time - self._t0, "prefill",
+                                      int(a.get("group", 1))))
+
+    # -------------------------------------------------------------- finalize
+    def finalize(self) -> dict:
+        ttft, tpot, queue, per_request = [], [], [], {}
+        finished = 0
+        generated = 0
+        admits = 0
+        hits = 0
+        prompt_tokens = 0
+        t_last = self._t0 or 0.0
+        for rid, e in sorted(self.req.items()):
+            row = {"prompt_len": e.get("prompt_len", 0),
+                   "cached_tokens": e.get("cached", 0),
+                   "n_tokens": e.get("n_tokens", 0)}
+            if "admit" in e:
+                admits += 1
+                hits += e.get("cached", 0) > 0
+                prompt_tokens += e.get("prompt_len", 0)
+                if "submit" in e:
+                    row["queue_s"] = e["admit"] - e["submit"]
+                    queue.append(row["queue_s"])
+            if "first" in e and "submit" in e:
+                row["ttft_s"] = e["first"] - e["submit"]
+                ttft.append(row["ttft_s"])
+            if "finish" in e:
+                finished += 1
+                generated += e.get("n_tokens", 0)
+                t_last = max(t_last, e["finish"])
+                if "first" in e and e.get("n_tokens", 0) > 1:
+                    row["tpot_s"] = (e["finish"] - e["first"]) \
+                        / (e["n_tokens"] - 1)
+                    tpot.append(row["tpot_s"])
+            per_request[rid] = row
+        span = max(t_last - (self._t0 or 0.0), 0.0)
+        return {
+            "requests": len(self.req),
+            "finished": finished,
+            "generated_tokens": generated,
+            "tok_per_s": generated / span if span > 0 else 0.0,
+            "ttft_s": _pctl(ttft),
+            "tpot_s": _pctl(tpot),
+            "queue_s": _pctl(queue),
+            "decode_steps": self.decode_steps,
+            "occupancy": {
+                "mean": (self.occupancy_sum / self.decode_steps
+                         if self.decode_steps else 0.0),
+                "max": self.occupancy_max,
+                "slots": self.slots,
+            },
+            "prefill": {"events": self.prefill_events,
+                        "tokens": self.prefill_tokens},
+            "prefix_cache": {
+                "admits": admits,
+                "hits": int(hits),
+                "hit_rate": hits / admits if admits else 0.0,
+                "reused_tokens": self.cached_tokens,
+                "reused_frac": (self.cached_tokens / prompt_tokens
+                                if prompt_tokens else 0.0),
+            },
+            "by_request": per_request,
+            "series": self.timeline,
+        }

@@ -1,10 +1,22 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Batched prefill + decode over the unified LM with PASTA instrumentation
-(operator events per phase; compiled decode artifact captured at the end).
+Open-loop request-trace driver over the request-lifecycle ``ServeEngine``:
+``--num-requests`` ragged prompts (optionally sharing a ``--shared-prefix``)
+arrive as a Poisson process at ``--rate`` req/s (0 = all at once) and are
+``submit()``-ed into the continuous-batching scheduler; the loop ticks
+``engine.step()`` until the trace drains.  PASTA instrumentation is two-level:
+the fleet session carries the registered ``serving`` tool (TTFT/TPOT
+percentiles, batch-occupancy timeline, prefix-cache hit rate) plus whatever
+``--pasta-tools`` names, and each request's child session carries
+``--request-tools``.
+
+``--json <path>`` writes the structured results (per-request + fleet
+reports, token throughput, latency percentiles) in the same
+one-dict-per-run contract as the dryrun driver.
 """
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -14,19 +26,66 @@ def _parse():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-gpt2")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(0 = submit the whole trace up front)")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length; ragged prompts draw uniformly "
+                         "from [prompt-len-min, prompt-len]")
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens shared by every prompt (prefix-cache "
+                         "reuse workload)")
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--prefix-block", type=int, default=16,
+                    help="prefix-cache key granularity (tokens)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="1x1")
-    ap.add_argument("--pasta-tools", default="kernel_freq")
+    ap.add_argument("--pasta-tools", default="serving,kernel_freq")
+    ap.add_argument("--request-tools", default="serving")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured per-request + fleet results")
     ap.add_argument("--seed", type=int, default=0)
+    # deprecated generate()-era spelling, kept for muscle memory
+    ap.add_argument("--batch", type=int, default=None,
+                    help=argparse.SUPPRESS)
     return ap.parse_args()
+
+
+def make_trace(args, vocab: int):
+    """Ragged prompts (+ optional shared prefix) and Poisson arrival times."""
+    import numpy as np
+    rng = np.random.default_rng(args.seed)
+    lo = min(args.prompt_len_min, args.prompt_len)
+    lens = rng.integers(lo, args.prompt_len + 1, args.num_requests)
+    prefix = rng.integers(0, vocab, (args.shared_prefix,), dtype=np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, vocab, (int(n),),
+                                            dtype=np.int32)])
+               for n in lens]
+    if args.rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                             args.num_requests))
+    else:
+        arrivals = np.zeros(args.num_requests)
+    return prompts, arrivals
+
+
+def _short(data: dict) -> dict:
+    return {k: v for k, v in data.items()
+            if k not in ("series", "top", "by_label", "by_request")}
 
 
 def main():
     args = _parse()
+    if args.batch is not None:
+        print("[serve] note: --batch is deprecated; the trace driver uses "
+              "--num-requests/--max-slots", file=sys.stderr)
+        args.num_requests = args.batch
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
@@ -38,7 +97,7 @@ def main():
     import repro.core as pasta
     from repro.dist.sharding import set_mesh
     from repro.models import init_params
-    from repro.serve import ServeEngine
+    from repro.serve import SamplingParams, ServeEngine
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -47,38 +106,100 @@ def main():
     mesh = jax.make_mesh((d, m), ("data", "model")) if d * m > 1 else None
     set_mesh(mesh)
 
+    max_seq = args.shared_prefix + args.prompt_len + args.max_new_tokens
+    prompts, arrivals = make_trace(args, max(cfg.vocab_size, 2))
+    params_s = SamplingParams(max_new_tokens=args.max_new_tokens,
+                              temperature=args.temperature)
+
     with pasta.Session(tools=args.pasta_tools, name="serve") as session:
         params = init_params(jax.random.PRNGKey(args.seed), cfg)
-        engine = ServeEngine(cfg, params,
-                             max_seq=args.prompt_len + args.max_new_tokens,
-                             session=session,
-                             request_tools=args.pasta_tools)
-        rng = np.random.default_rng(args.seed)
-        vocab = max(cfg.vocab_size, 2)
-        prompts = rng.integers(0, vocab, (args.batch, args.prompt_len),
-                               dtype=np.int32)
-        if cfg.frontend == "embed":
-            prompts = rng.standard_normal(
-                (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)
-
+        engine = ServeEngine(cfg, params, max_seq=max_seq,
+                             max_slots=args.max_slots, session=session,
+                             request_tools=args.request_tools or None,
+                             prefix_cache=not args.no_prefix_cache,
+                             prefix_block=args.prefix_block,
+                             rng_seed=args.seed)
         t0 = time.perf_counter()
-        out = engine.generate(prompts, max_new_tokens=args.max_new_tokens,
-                              temperature=args.temperature)
+        pending = list(zip(arrivals, prompts))
+        rids = []
+        outputs = {}            # collected at retirement (pruning-safe)
+        while pending or engine.sched.has_work:
+            now = time.perf_counter() - t0
+            while pending and pending[0][0] <= now:
+                rids.append(engine.submit(pending.pop(0)[1], params_s))
+            if engine.sched.has_work:
+                for rid in engine.step()["finished"]:
+                    outputs[rid] = list(engine.requests[rid].tokens)
+            elif pending:
+                time.sleep(min(pending[0][0] - now, 0.05))
         dt = time.perf_counter() - t0
-        n_tok = out.shape[0] * out.shape[1]
-        print(f"[serve] generated {out.shape} in {dt:.2f}s "
-              f"({n_tok / dt:.1f} tok/s)")
-        print(f"[serve] sample: {out[0][:12].tolist()}")
+        n_tok = sum(len(t) for t in outputs.values())
+        print(f"[serve] {len(rids)} requests, {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / dt:.1f} tok/s), max_slots={args.max_slots}, "
+              f"rate={args.rate or 'inf'}")
+        print(f"[serve] sample: {outputs[rids[0]][:12]}")
+        try:
+            # fleet kernel_freq etc. see the fused decode step's compiled HLO
+            import jax.numpy as jnp
+            compiled = engine._decode.lower(
+                params, engine.pool.cache,
+                jnp.zeros((args.max_slots, 1), jnp.int32)).compile()
+            session.capture_compiled(compiled, label="serve.decode",
+                                     steps=max(engine.decode_steps, 1))
+        except Exception as e:                              # noqa: BLE001
+            print(f"[serve] decode capture skipped: {e}", file=sys.stderr)
         reports = session.reports()
+
+    serving = reports["serving"].data if "serving" in reports else {}
     for name, rep in reports.items():
-        short = {k: v for k, v in rep.data.items()
-                 if k not in ("series", "top", "by_label")}
-        print(f"  {name}: {short}")
-    for req in engine.request_reports:
-        for name, rep in req.items():
-            short = {k: v for k, v in rep.data.items()
-                     if k not in ("series", "top", "by_label")}
-            print(f"  [{rep.session}] {name}: {short}")
+        print(f"  {name}: {_short(rep.data)}")
+    per_request = []
+    for req_reports in engine.request_reports:
+        for name, rep in req_reports.items():
+            per_request.append({"session": rep.session, "tool": name,
+                                "data": rep.data})
+
+    if args.json:
+        occ = serving.get("occupancy", {})
+        pc = serving.get("prefix_cache", {})
+        out = {
+            "driver": "serve",
+            "arch": args.arch,
+            "status": "ok",
+            "config": {
+                "reduced": args.reduced,
+                "num_requests": args.num_requests,
+                "rate": args.rate,
+                "max_slots": args.max_slots,
+                "prompt_len": [args.prompt_len_min, args.prompt_len],
+                "shared_prefix": args.shared_prefix,
+                "max_new_tokens": args.max_new_tokens,
+                "temperature": args.temperature,
+                "prefix_cache": not args.no_prefix_cache,
+                "seed": args.seed,
+                "mesh": args.mesh,
+            },
+            "summary": {
+                "wall_s": dt,
+                "generated_tokens": n_tok,
+                "tok_per_s": n_tok / dt if dt > 0 else 0.0,
+                "ttft_s": serving.get("ttft_s"),
+                "tpot_s": serving.get("tpot_s"),
+                "queue_s": serving.get("queue_s"),
+                "occupancy_mean": occ.get("mean"),
+                "occupancy_max": occ.get("max"),
+                "decode_steps": serving.get("decode_steps"),
+                "prefix_hit_rate": pc.get("hit_rate"),
+                "prefix_reused_frac": pc.get("reused_frac"),
+            },
+            "fleet": {name: rep.data for name, rep in reports.items()},
+            "requests": per_request,
+            "tokens": {int(rid): [int(t) for t in toks]
+                       for rid, toks in outputs.items()},
+        }
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1, default=str)
+        print(f"[serve] wrote {args.json}")
     return 0
 
 

@@ -185,18 +185,31 @@ def _sdpa_blocked(q, k, v, causal: bool, chunk: int = 1024):
     return out.reshape(b, s, hkv * g, d_)
 
 
-def _sdpa_decode_partial(q, k_cache, v_cache, lengths):
+def _sdpa_decode_partial(q, k_cache, v_cache, lengths, base=None):
     """Partial-softmax decode stats over one KV segment.
 
     q:(B,S,Hkv,G,D), cache:(B,T,Hkv,D). Returns (acc, m, l) f32 where
     ``acc`` is the un-normalized weighted V sum — mergeable across segments
-    (flash-decode two-tier / sequence-parallel merging)."""
+    (flash-decode two-tier / sequence-parallel merging).
+
+    ``base`` (B,) int32: per-row sequence length *before* this append.  When
+    given with S>1 (chunked suffix prefill against a cache, the serving
+    prefix-reuse path), masking is causal per query token — query ``s`` sits
+    at absolute position ``base+s`` and sees keys ``ki <= base+s``.  Without
+    it all S queries share the (B,)-length mask (the pre-existing one-token
+    decode semantics, which ``base`` reproduces exactly at S=1)."""
     scale = 1.0 / math.sqrt(q.shape[-1])
     scores = jnp.einsum("bshgd,bthd->bhgst", q, k_cache).astype(jnp.float32) \
         * scale
     t = k_cache.shape[1]
-    mask = jnp.arange(t)[None, :] < lengths[:, None]         # (B,T)
-    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    s = q.shape[1]
+    if base is None or s == 1:
+        mask = jnp.arange(t)[None, :] < lengths[:, None]     # (B,T)
+        scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
+    else:
+        limit = base[:, None] + jnp.arange(1, s + 1)[None, :]   # (B,S)
+        mask = jnp.arange(t)[None, None, :] < limit[:, :, None]  # (B,S,T)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
     m = scores.max(axis=-1)                                  # (B,H,G,S)
     p = jnp.exp(scores - m[..., None])
     l = p.sum(axis=-1)
@@ -214,10 +227,11 @@ def _merge_partials(parts):
     return acc / jnp.maximum(l_all, 1e-30)[..., None], m_all, l_all
 
 
-def _sdpa_decode(q, k_cache, v_cache, lengths):
-    """Decode: q:(B,1,Hkv,G,D), cache:(B,T,Hkv,D) possibly seq-sharded over
-    the model axis; masked softmax over the cache with global statistics."""
-    acc, m, l = _sdpa_decode_partial(q, k_cache, v_cache, lengths)
+def _sdpa_decode(q, k_cache, v_cache, lengths, base=None):
+    """Decode: q:(B,S,Hkv,G,D), cache:(B,T,Hkv,D) possibly seq-sharded over
+    the model axis; masked softmax over the cache with global statistics.
+    ``base``: per-row pre-append lengths for causal multi-token appends."""
+    acc, m, l = _sdpa_decode_partial(q, k_cache, v_cache, lengths, base=base)
     out = (acc / jnp.maximum(l, 1e-30)[..., None])
     out = out.astype(q.dtype).transpose(0, 3, 1, 2, 4)       # (B,S,Hkv,G,D)
     b, s = out.shape[:2]
@@ -257,13 +271,24 @@ def attention(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
         new_cache = {"k": cache["k"], "v": cache["v"], "rk": rk, "rv": rv,
                      "length": lengths, "main_len": main_len}
     else:
-        pos = cache["length"][0]
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, 1)
+        base = cache["length"]
+        if x.shape[1] == 1:
+            # ragged-slot decode: each row appends at ITS OWN length (the
+            # serving pool interleaves requests at different positions);
+            # out-of-range rows (stale free slots at max_seq) drop the write
+            b_idx = jnp.arange(k.shape[0])
+            k_cache = cache["k"].at[b_idx, base].set(k[:, 0], mode="drop")
+            v_cache = cache["v"].at[b_idx, base].set(v[:, 0], mode="drop")
+        else:
+            # multi-token append (chunked/suffix prefill): rows share a base
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
+                                                          base[0], 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
+                                                          base[0], 1)
         k_cache = shard(k_cache, "batch", "seq_sp", None, "head_dim")
         v_cache = shard(v_cache, "batch", "seq_sp", None, "head_dim")
-        lengths = cache["length"] + x.shape[1]
-        out = _sdpa_decode(qg, k_cache, v_cache, lengths)
+        lengths = base + x.shape[1]
+        out = _sdpa_decode(qg, k_cache, v_cache, lengths, base=base)
         new_cache = {"k": k_cache, "v": v_cache, "length": lengths}
     out = shard(out, "batch", "seq", "heads", "head_dim")
     op_hook("attn.sdpa", (q, k, v), (out,))

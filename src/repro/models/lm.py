@@ -261,10 +261,14 @@ def cache_axes(cfg: ModelConfig) -> dict:
 
 def forward(params: dict, inputs: jax.Array, cfg: ModelConfig,
             cache: dict | None = None, positions: jax.Array | None = None,
-            return_cache: bool = False, logits_mode: str = "all"):
+            return_cache: bool = False, logits_mode: str = "all",
+            logits_index: jax.Array | None = None):
     """inputs: (B,S) int tokens or (B,S,d) embeddings (frontend stub).
     Returns (logits, new_cache_or_None).  ``return_cache=True`` without an
-    input cache collects the prefill KV/SSM caches."""
+    input cache collects the prefill KV/SSM caches.  ``logits_mode="index"``
+    runs the lm_head on one per-row position gathered from ``logits_index``
+    (B,) — ragged right-padded serving prefill, where each row's last real
+    token sits at a different offset."""
     dt = _dtype(cfg)
     if inputs.ndim == 2 and cfg.frontend == "none":
         h = params["embed"].astype(dt)[inputs]
@@ -292,6 +296,8 @@ def forward(params: dict, inputs: jax.Array, cfg: ModelConfig,
     h = L.rmsnorm(h, params["final_norm"], cfg.rmsnorm_eps)
     if logits_mode == "last":
         h = h[:, -1:, :]          # serving: lm_head on the new token only
+    elif logits_mode == "index":
+        h = h[jnp.arange(h.shape[0])[:, None], logits_index[:, None]]
     if cfg.tie_embeddings and "embed" in params:
         logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(dt))
     elif "lm_head" in params:

@@ -1,3 +1,14 @@
-"""Serving substrate: KV/SSM cache management + batched engine."""
+"""Serving substrate: request-lifecycle engine over a slotted KV pool.
+
+``ServeEngine.submit()/step()/run()/stream()`` is the continuous-batching
+API; ``generate()`` survives as a deprecated one-shot shim.  See
+``serve.scheduler`` (FCFS admission, ragged right-padding) and
+``serve.cache`` (KV slot pool, hash-keyed prefix reuse).
+"""
 
 from .engine import ServeEngine
+from .scheduler import Request, RequestState, SamplingParams, Scheduler
+from .cache import KVSlotPool, PrefixCache
+
+__all__ = ["ServeEngine", "Request", "RequestState", "SamplingParams",
+           "Scheduler", "KVSlotPool", "PrefixCache"]

@@ -1,0 +1,228 @@
+"""Slot-indexed KV/SSM cache pool + hash-keyed prompt-prefix cache.
+
+The serving cache is a fixed ``(slots, max_seq)`` pool: slot ``i`` of every
+cache leaf (KV rows, SSM states, per-slot lengths) belongs to the request
+currently occupying slot ``i``.  Requests of different lengths interleave
+freely — decode writes land at each slot's own length (per-row scatter in
+:func:`repro.models.layers.attention`) and the per-row length masks keep
+stale bytes from retired requests invisible.  Admitting a request is one
+donated-buffer ``dynamic_update_slice`` per leaf (:meth:`KVSlotPool.insert`);
+retiring is free (the slot index just returns to the allocator).
+
+:class:`PrefixCache` is the cross-request reuse layer: completed prefills
+publish their prompt K/V under hash keys at block-aligned prefix lengths, and
+a new request whose prompt prefix matches a stored key skips prefilling those
+tokens — its slot is seeded with the stored K/V and only the suffix runs
+through the model (RoPE keys are absolute-position, so a shared prefix at
+positions ``0..L-1`` is bit-reusable).  Prefix reuse is KV-only: SSM/hybrid
+states summarize the whole prefix nonlinearly and are not block-addressable,
+so those families always prefill cold (hit rate 0 by construction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache
+from repro.models.config import ModelConfig
+
+#: marker in the slot-axis spec tree for per-slot int leaves ("length",
+#: "main_len") whose pool value is overridden with the request's true length
+#: (a right-padded group prefill reports the padded length for every row)
+LENGTH = "length"
+
+
+def slot_axes(cache: dict) -> dict:
+    """Tree parallel to ``cache`` giving each leaf's slot (batch) axis.
+
+    Mirrors the layout knowledge of :func:`repro.models.lm.init_cache`:
+    KV leaves carry batch at axis 1 under a leading layer axis, SSM leaves at
+    axis 1 (axis 2 for the hybrid ``ssm_groups`` with its extra
+    layer-in-group axis), and length-like vectors at axis 0 (marked
+    :data:`LENGTH`).
+    """
+    spec: dict = {}
+    for key, val in cache.items():
+        if key == "kv":
+            spec["kv"] = {k: (LENGTH if k in ("length", "main_len") else 1)
+                          for k in val}
+        elif key == "length":
+            spec["length"] = LENGTH
+        elif key in ("ssm", "ssm_tail"):
+            spec[key] = {k: 1 for k in val}
+        elif key == "ssm_groups":
+            spec[key] = {k: 2 for k in val}
+        else:
+            raise ValueError(f"unknown cache entry {key!r}")
+    return spec
+
+
+def _slot_put(pool_leaf, src_leaf, ax, slot, row, length):
+    if ax == LENGTH:
+        val = jnp.full((1,), length, pool_leaf.dtype)
+        return jax.lax.dynamic_update_slice(pool_leaf, val, (slot,))
+    sl = jax.lax.dynamic_slice_in_dim(src_leaf, row, 1, axis=ax)
+    # prefill caches may differ from the pool along non-slot dims (seq at
+    # the prompt bucket vs max_seq): crop then zero-pad — submit() bounds
+    # real content by max_seq, so cropping only drops right-pad junk, and
+    # bytes beyond the slot's length are masked at decode anyway
+    sl = sl[tuple(slice(0, n) for n in pool_leaf.shape[:sl.ndim])]
+    pad = [(0, pool_leaf.shape[i] - sl.shape[i]) for i in range(sl.ndim)]
+    pad[ax] = (0, 0)
+    sl = jnp.pad(sl, pad)
+    starts = [0] * sl.ndim
+    starts[ax] = slot
+    return jax.lax.dynamic_update_slice(pool_leaf, sl.astype(pool_leaf.dtype),
+                                        tuple(starts))
+
+
+def slot_insert(pool: dict, src: dict, slot, row, length) -> dict:
+    """Copy row ``row`` of prefill cache ``src`` into slot ``slot`` of the
+    pool, overriding length leaves with the request's true ``length``."""
+    spec = slot_axes(pool)
+    return jax.tree.map(
+        lambda p, s, ax: _slot_put(p, s, ax, slot, row, length),
+        pool, src, spec)
+
+
+def bucket(n: int, floor: int = 8) -> int:
+    """Next power-of-two ≥ n (≥ floor) — the right-padding bucket for ragged
+    prompts, bounding prefill recompiles to O(log max_seq) shapes."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class KVSlotPool:
+    """Fixed ``(slots, max_seq)`` decode cache pool with per-slot lengths.
+
+    ``cache`` is the live device tree (same pytree the model's decode path
+    consumes); callers reassign it after donated decode steps.  ``insert``
+    is jitted with the pool donated, so admission is an in-place scatter.
+    """
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_seq: int):
+        if cfg.kv_two_tier:
+            raise NotImplementedError(
+                "the slotted serving pool manages raggedness itself; "
+                "kv_two_tier's frozen-main/recent-buffer split is a "
+                "long-context decode layout, not a slot pool")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, slots, max_seq)
+        self._insert = jax.jit(slot_insert, donate_argnums=(0,))
+
+    def insert(self, src_cache: dict, slot: int, row: int,
+               length: int) -> None:
+        self.cache = self._insert(self.cache, src_cache, jnp.int32(slot),
+                                  jnp.int32(row), jnp.int32(length))
+
+    # ------------------------------------------------------- prefix plumbing
+    def extract_kv(self, slot: int, upto: int) -> dict:
+        """Host copy of slot's K/V for the first ``upto`` positions —
+        ``{"k","v"}: (n_layers, upto, n_kv_heads, head_dim)`` numpy."""
+        kv = self.cache["kv"]
+        return {"k": np.asarray(kv["k"][:, slot, :upto]),
+                "v": np.asarray(kv["v"][:, slot, :upto])}
+
+    def seeded_prefill_cache(self, kv_prefix: dict | None,
+                             batch: int = 1) -> dict:
+        """A fresh single-request prefill cache (attention families only),
+        optionally seeded with a stored prefix at positions ``0..L-1`` so
+        only the prompt suffix needs prefilling."""
+        dt = jnp.dtype(self.cfg.dtype)
+        n = self.cache["kv"]["k"].shape[0]
+        hkv, hd = self.cfg.n_kv_heads, self.cfg.head_dim
+        k = np.zeros((n, batch, self.max_seq, hkv, hd), dt)
+        v = np.zeros_like(k)
+        length = np.zeros((batch,), np.int32)
+        if kv_prefix is not None:
+            pl = kv_prefix["k"].shape[1]
+            k[:, 0, :pl] = kv_prefix["k"]
+            v[:, 0, :pl] = kv_prefix["v"]
+            length[0] = pl
+        return {"kv": {"k": jnp.asarray(k), "v": jnp.asarray(v),
+                       "length": jnp.asarray(length)}}
+
+
+class PrefixCache:
+    """Hash-keyed prompt-prefix store (block-aligned keys, LRU-bounded).
+
+    ``insert(tokens, kv)`` publishes a finished prefill under keys for every
+    ``block``-multiple prefix length plus the full prompt, all referencing
+    the same backing arrays (numpy views — no copies).  ``lookup(tokens)``
+    returns the longest stored prefix strictly shorter than the prompt (at
+    least one real token must run through the model to produce logits).
+    """
+
+    def __init__(self, block: int = 16, capacity: int = 64):
+        self.block = block
+        self.capacity = capacity
+        self._store: dict = {}          # (L, prefix_bytes) -> {"k","v"}
+        self._order: list = []          # LRU over keys
+        self.lookups = 0
+        self.hits = 0
+        self.reused_tokens = 0
+        self.prompt_tokens = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def _touch(self, key) -> None:
+        if key in self._order:
+            self._order.remove(key)
+        self._order.append(key)
+
+    def covers(self, tokens: np.ndarray) -> bool:
+        """True when this exact prompt was already published (its full-
+        length key exists — block keys are inserted alongside it), so a
+        re-insert would transfer identical KV for nothing."""
+        key = (len(tokens), tokens.tobytes())
+        if key in self._store:
+            self._touch(key)
+            return True
+        return False
+
+    def lookup(self, tokens: np.ndarray):
+        """Longest-match lookup: ``(hit_len, {"k","v"}) | (0, None)``."""
+        self.lookups += 1
+        n = len(tokens)
+        self.prompt_tokens += n
+        lens = sorted({L for (L, _) in self._store if L < n}, reverse=True)
+        for L in lens:
+            key = (L, tokens[:L].tobytes())
+            ent = self._store.get(key)
+            if ent is not None:
+                self.hits += 1
+                self.reused_tokens += L
+                self._touch(key)
+                return L, ent
+        return 0, None
+
+    def insert(self, tokens: np.ndarray, kv: dict) -> None:
+        """``kv``: {"k","v"} (n_layers, len(tokens), heads, head_dim)."""
+        n = len(tokens)
+        lens = {L for L in range(self.block, n, self.block)} | {n}
+        for L in lens:
+            key = (L, tokens[:L].tobytes())
+            self._store[key] = {"k": kv["k"][:, :L], "v": kv["v"][:, :L]}
+            self._touch(key)
+        while len(self._store) > self.capacity:
+            old = self._order.pop(0)
+            self._store.pop(old, None)
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._store),
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hits / self.lookups if self.lookups else 0.0,
+            "reused_tokens": self.reused_tokens,
+            "prompt_tokens": self.prompt_tokens,
+            "reused_frac": (self.reused_tokens / self.prompt_tokens
+                            if self.prompt_tokens else 0.0),
+        }

@@ -1,34 +1,65 @@
-"""Batched serving engine: prefill → decode with functional caches.
+"""Request-lifecycle serving engine: continuous batching over a KV slot pool.
 
-The cache layout follows the dry-run cells: KV sequence dim shards over the
-``model`` mesh axis for long contexts (flash-decode with global softmax
-statistics, see models.layers._sdpa_decode); SSM archs carry O(1) recurrent
-state.  Prefill produces the cache directly from the chunked forward; decode
-is one jitted step per token with donated cache.
+The engine is a scheduler tick loop, not a one-shot call::
 
-PASTA instrumentation is *per request*: every ``generate`` call runs inside
-a child :class:`~repro.core.Session` of the engine's session, so each
-request gets isolated tool reports (``request_reports``) while the parent
-session still receives every event for fleet-wide aggregates.
+    engine = ServeEngine(cfg, params, max_seq=256, max_slots=4)
+    rid = engine.submit(prompt, SamplingParams(max_new_tokens=32))
+    while engine.step()["working"]:
+        ...                                    # or: engine.run(requests)
+
+One :meth:`step` is one scheduler tick: admit waiting requests FCFS into
+free KV slots and prefill them (cold requests grouped with right-padding;
+prompts whose prefix matches the hash-keyed :class:`~repro.serve.cache.
+PrefixCache` skip the cached tokens and prefill only the suffix), then one
+fused decode step over *all* active slots (each row appends at its own
+length — see the per-row scatter in ``models.layers.attention``), then
+retire finished requests.  Heterogeneous traffic therefore shares every
+decode dispatch, and batch occupancy/goodput become measurable quantities
+instead of a fixed batch dimension.
+
+PASTA instrumentation is per request *across interleaved steps*: each
+submitted request opens a child :class:`~repro.core.Session` of the engine's
+session at submit time and closes it at retirement, so its lifecycle events
+(``serve.request.submit/admit/first_token/finish``) and any per-request tool
+reports span queueing, prefill, and every fused decode tick it participated
+in, while the parent session aggregates the fleet view (the registered
+``serving`` tool turns those events into TTFT/TPOT, occupancy timeline, and
+prefix-hit-rate reports).
+
+``generate(prompts)`` survives as a deprecated shim over ``submit``/``run``
+with the legacy observability contract (one child session per *call*).
 """
 
 from __future__ import annotations
 
-import collections
 import functools
 import itertools
+import time
+import warnings
+
+import collections
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.core as pasta
-from repro.models import forward, init_cache
+from repro.models import forward
 from repro.models.config import ModelConfig
+from .cache import KVSlotPool, PrefixCache, bucket
+from .scheduler import Request, SamplingParams, Scheduler, pad_group
+
+#: families whose decode state is attention KV only — eligible for padded
+#: group prefill and prefix-cache reuse.  SSM/hybrid state summarizes the
+#: whole prefix nonlinearly (a pad token would mutate it, unlike masked KV)
+#: and MoE routing couples tokens, so those prefill alone at exact length.
+#: vlm/audio would qualify if tokenized, but their configs are
+#: embedding-frontend stubs with no autoregressive token loop to serve.
+_KV_ONLY = ("dense",)
 
 
 def _pad_cache_to(cache: dict, cfg: ModelConfig, max_seq: int) -> dict:
-    """Grow the prefill KV cache's sequence dim to ``max_seq`` slots."""
+    """Grow a prefill KV cache's sequence dim to ``max_seq`` slots."""
     if "kv" not in cache:
         return cache
     kv = cache["kv"]
@@ -49,36 +80,73 @@ def _pad_cache_to(cache: dict, cfg: ModelConfig, max_seq: int) -> dict:
 
 
 class ServeEngine:
-    """Greedy/temperature batched generation over the unified LM."""
+    """Continuous-batching generation engine over the unified LM."""
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
-                 handler=None, session: "pasta.Session | None" = None,
+                 max_slots: int = 8, handler=None,
+                 session: "pasta.Session | None" = None,
                  rng_seed: int = 0, request_tools=None,
-                 max_request_reports: int = 64):
-        """``session``: parent Session for per-request child sessions (the
-        innermost active session when omitted).  ``request_tools``: tool
-        spec instantiated fresh for every request's child session; its
-        reports land in ``request_reports``.  ``handler``: legacy pinned
-        event sink — disables per-request sessions (compat path)."""
+                 max_request_reports: int = 64, prefix_cache: bool = True,
+                 prefix_block: int = 16, max_retained_requests: int = 4096):
+        """``max_slots``: concurrent requests the KV pool holds; waiting
+        requests queue FCFS.  ``session``: parent Session for per-request
+        child sessions (innermost active session when omitted).
+        ``request_tools``: tool spec instantiated fresh for every request's
+        child session; reports land in ``request_reports`` at retirement.
+        ``handler``: legacy pinned event sink — disables per-request
+        sessions (compat path).  ``prefix_cache``: hash-keyed prompt-prefix
+        reuse (KV-only families; block-aligned keys of ``prefix_block``)."""
+        if cfg.frontend != "none":
+            raise NotImplementedError(
+                "ServeEngine decodes token ids; embedding-frontend archs "
+                "have no autoregressive token loop to serve")
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.session = session
         self._handler = handler
+        self._route_handler = None        # legacy generate(): pin to the
+        self._per_request_sessions = True  # per-call child session
         self.request_tools = request_tools
         self.request_reports: collections.deque = collections.deque(
             maxlen=max_request_reports)
         self._req_ids = itertools.count()
-        self._key = jax.random.PRNGKey(rng_seed)
-        self._prefill = jax.jit(functools.partial(self._prefill_impl, cfg))
+        self._call_ids = itertools.count()   # legacy generate() child names
+        self._rng_seed = rng_seed
+        self.requests: dict = {}             # rid -> Request
+        # long-lived engines must not grow host memory with traffic served:
+        # retired Requests (prompt + tokens) are pruned FIFO beyond this
+        # bound (live requests are never pruned; the floor keeps one tick's
+        # worth of retirements readable for run()/stream() collection)
+        self.max_retained_requests = max(max_retained_requests, max_slots)
+        self._retired: collections.deque = collections.deque()
+        self.sched = Scheduler(max_slots)
+        self.pool = KVSlotPool(cfg, max_slots, max_seq)
+        self.prefix_cache = (PrefixCache(block=prefix_block)
+                             if prefix_cache and cfg.family in _KV_ONLY
+                             else None)
+        self.last_tokens = np.zeros((max_slots,), np.int32)
+        self.decode_steps = 0
+        self._prefill_cold = jax.jit(
+            functools.partial(self._prefill_cold_impl, cfg))
+        self._prefill_suffix = jax.jit(
+            functools.partial(self._prefill_suffix_impl, cfg),
+            donate_argnums=(1,))
         self._decode = jax.jit(functools.partial(self._decode_impl, cfg),
                                donate_argnums=(1,))
 
+    # ------------------------------------------------------------- jit impls
     @staticmethod
-    def _prefill_impl(cfg, params, tokens):
+    def _prefill_cold_impl(cfg, params, tokens, last_idx):
         logits, cache = forward(params, tokens, cfg, return_cache=True,
-                                logits_mode="last")
-        return logits[:, -1, :], cache
+                                logits_mode="index", logits_index=last_idx)
+        return logits[:, 0, :], cache
+
+    @staticmethod
+    def _prefill_suffix_impl(cfg, params, cache, tokens, last_idx):
+        logits, cache = forward(params, tokens, cfg, cache=cache,
+                                logits_mode="index", logits_index=last_idx)
+        return logits[:, 0, :], cache
 
     @staticmethod
     def _decode_impl(cfg, params, cache, tokens):
@@ -86,58 +154,295 @@ class ServeEngine:
                                 logits_mode="last")
         return logits[:, -1, :], cache
 
-    def _sample(self, logits, temperature: float):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(k, logits / temperature, axis=-1)
-
+    # -------------------------------------------------------------- plumbing
     @property
     def handler(self):
-        """The engine's event sink: the pinned legacy handler, the parent
-        session's handler, or the innermost active session's."""
+        """The engine's fleet-level event sink: the legacy generate() route,
+        the pinned legacy handler, the parent session's handler, or the
+        innermost active session's."""
+        if self._route_handler is not None:
+            return self._route_handler
         if self._handler is not None:
             return self._handler
         if self.session is not None:
             return self.session.handler
         return pasta.current_handler()
 
+    def _req_handler(self, req: Request):
+        """Per-request events go through the request's child session (which
+        forwards to the parent), or the engine sink when sessions are off."""
+        if req.session is not None:
+            return req.session.handler
+        return self.handler
+
+    def _sample_one(self, req: Request, logits_row: np.ndarray) -> int:
+        if req.params.temperature <= 0:
+            return int(np.argmax(logits_row))
+        seed = req.params.seed
+        key = jax.random.PRNGKey(self._rng_seed if seed is None else seed)
+        if seed is None:
+            key = jax.random.fold_in(key, req.rid)
+        key = jax.random.fold_in(key, len(req.tokens))
+        return int(jax.random.categorical(
+            key, jnp.asarray(logits_row) / req.params.temperature))
+
+    # ------------------------------------------------------------ submission
+    def submit(self, prompt, params: SamplingParams | None = None) -> int:
+        """Enqueue one generation request; returns its request id.  The
+        request's child Session opens here and spans queueing, prefill, and
+        every fused decode step until retirement."""
+        params = params or SamplingParams()
+        prompt = np.asarray(prompt, dtype=np.int32)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            raise ValueError("submit() takes ONE 1-D token prompt; use "
+                             "run()/generate() for batches")
+        if params.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.shape[0] + params.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new_tokens "
+                f"({params.max_new_tokens}) exceeds max_seq={self.max_seq}")
+        rid = next(self._req_ids)
+        req = Request(rid=rid, prompt=prompt, params=params,
+                      submit_time=time.perf_counter())
+        if self._per_request_sessions and self._handler is None:
+            parent = self.session or pasta.current_session()
+            req.session = parent.child(
+                tools=self.request_tools or (),
+                name=f"{parent.name}/request{rid}")
+        self.requests[rid] = req
+        self.sched.submit(req)
+        self._req_handler(req).operator_start(
+            "serve.request.submit", rid=rid, prompt_len=req.prompt_len,
+            max_new_tokens=params.max_new_tokens)
+        return rid
+
+    # ------------------------------------------------------------------ tick
+    def step(self) -> dict:
+        """One scheduler tick: admit+prefill into free slots, one fused
+        decode over all active slots, retire finished requests.  Returns
+        ``{"admitted","finished","new_tokens","active","queued","working"}``.
+        """
+        admitted = self.sched.admit()
+        new_tokens: list = []
+        finished: list = []
+        cold_group: list = []
+        for req in admitted:
+            hit_len, entry = 0, None
+            if self.prefix_cache is not None and req.prompt_len > 1:
+                hit_len, entry = self.prefix_cache.lookup(req.prompt)
+            req.cached_tokens = hit_len
+            req.prefix_kv = entry
+            self._req_handler(req).operator_start(
+                "serve.request.admit", rid=req.rid, slot=req.slot,
+                prompt_len=req.prompt_len, cached_tokens=hit_len,
+                queue_s=req.admit_time - req.submit_time)
+            if hit_len == 0 and self.cfg.family in _KV_ONLY:
+                cold_group.append(req)
+            else:
+                self._prefill_unit([req], new_tokens, finished)
+        if cold_group:
+            self._prefill_unit(cold_group, new_tokens, finished)
+        if self.sched.running:
+            self._decode_step(new_tokens, finished)
+        return {
+            "admitted": [r.rid for r in admitted],
+            "finished": finished,
+            "new_tokens": new_tokens,
+            "active": self.sched.n_active,
+            "queued": self.sched.n_queued,
+            "working": self.sched.has_work,
+        }
+
+    def _prefill_unit(self, reqs: list, new_tokens: list,
+                      finished: list) -> None:
+        """Prefill one admission unit: a right-padded cold group (KV-only
+        families) or a single request (prefix hit / SSM / hybrid / MoE)."""
+        hit = len(reqs) == 1 and reqs[0].cached_tokens > 0
+        self.handler.operator_start(
+            "serve.prefill",
+            rids=tuple(r.rid for r in reqs),
+            slots=tuple(r.slot for r in reqs),
+            n_tokens=int(sum(r.prompt_len - r.cached_tokens for r in reqs)),
+            cached=int(sum(r.cached_tokens for r in reqs)),
+            group=len(reqs))
+        if hit:
+            req = reqs[0]
+            suffix = req.prompt[req.cached_tokens:]
+            # right-pad the suffix to a pow2 bucket too (bounds recompiles;
+            # causality keeps the pad exact) — capped so the append window
+            # stays inside max_seq, else dynamic_update_slice would clamp
+            # the start and misalign the writes
+            n = len(suffix)
+            s_pad = min(bucket(n), self.max_seq - req.cached_tokens)
+            toks = np.zeros((1, s_pad), np.int32)
+            toks[0, :n] = suffix
+            cache = self.pool.seeded_prefill_cache(req.prefix_kv)
+            logits, cache = self._prefill_suffix(
+                self.params, cache, jnp.asarray(toks),
+                jnp.asarray([n - 1], np.int32))
+        else:
+            # ragged group: right-pad to a power-of-two bucket; causality
+            # makes the pad exact for attention (masked KV), so per-row
+            # results match solo prefill.  SSM/hybrid/MoE units are single
+            # requests prefilled at EXACT length — a pad token would update
+            # the carried SSM state (input-dependent dt) / MoE routing.
+            toks, lens = pad_group([r.prompt for r in reqs],
+                                   pow2=self.cfg.family in _KV_ONLY)
+            logits, cache = self._prefill_cold(
+                self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
+        logits = np.asarray(logits)
+        for row, req in enumerate(reqs):
+            self.pool.insert(cache, req.slot, row, req.prompt_len)
+            if self.prefix_cache is not None \
+                    and not self.prefix_cache.covers(req.prompt):
+                # publish prompt KV for reuse; skipped when this exact
+                # prompt is already in the store (the extract is a blocking
+                # device->host copy on the prefill critical path)
+                self.prefix_cache.insert(
+                    req.prompt, self.pool.extract_kv(req.slot,
+                                                     req.prompt_len))
+            req.prefix_kv = None
+            tok = self._sample_one(req, logits[row])
+            req.tokens.append(tok)
+            req.first_token_time = time.perf_counter()
+            self.last_tokens[req.slot] = tok
+            new_tokens.append((req.rid, tok))
+            self._req_handler(req).operator_start(
+                "serve.request.first_token", rid=req.rid,
+                ttft_s=req.first_token_time - req.submit_time)
+        self.handler.operator_end(
+            "serve.prefill", rids=tuple(r.rid for r in reqs))
+        for req in list(reqs):
+            if req.done:
+                self._retire(req, finished)
+
+    def _decode_step(self, new_tokens: list, finished: list) -> None:
+        """One fused decode over every active slot (free slots ride along as
+        masked no-ops; their stale bytes never enter any softmax)."""
+        active = dict(sorted(self.sched.running.items()))
+        self.decode_steps += 1
+        self.handler.operator_start(
+            "serve.decode", step=self.decode_steps, active=len(active),
+            slots=self.pool.slots, queued=self.sched.n_queued,
+            rids=tuple(r.rid for r in active.values()))
+        logits, self.pool.cache = self._decode(
+            self.params, self.pool.cache,
+            jnp.asarray(self.last_tokens[:, None]))
+        logits = np.asarray(logits)
+        for slot, req in active.items():
+            tok = self._sample_one(req, logits[slot])
+            req.tokens.append(tok)
+            self.last_tokens[slot] = tok
+            new_tokens.append((req.rid, tok))
+        self.handler.operator_end("serve.decode", step=self.decode_steps,
+                                  active=len(active))
+        for req in list(active.values()):
+            if req.done:
+                self._retire(req, finished)
+
+    def _retire(self, req: Request, finished: list) -> None:
+        n = len(req.tokens)
+        self.sched.release(req)
+        self._req_handler(req).operator_start(
+            "serve.request.finish", rid=req.rid, n_tokens=n,
+            ttft_s=req.first_token_time - req.submit_time,
+            total_s=req.finish_time - req.submit_time)
+        if req.session is not None:
+            if self.request_tools:
+                self.request_reports.append(req.session.reports())
+            req.session.close()
+            req.session = None
+        finished.append(req.rid)
+        self._retired.append(req.rid)
+        while len(self._retired) > self.max_retained_requests:
+            self.requests.pop(self._retired.popleft(), None)
+
+    # ------------------------------------------------------------ high level
+    def run(self, requests=()) -> dict:
+        """Submit ``requests`` (prompts, or ``(prompt, SamplingParams)``
+        pairs) and tick until all queued work drains.  Returns
+        ``{rid: np.ndarray tokens}`` for the requests submitted here (or for
+        everything drained, when called with no new requests)."""
+        rids = [self.submit(*self._split(r)) for r in requests]
+        # tokens are snapshotted as requests retire — a drain larger than
+        # max_retained_requests must not lose early results to pruning
+        drained: dict = {}
+        while self.sched.has_work:
+            for rid in self.step()["finished"]:
+                drained[rid] = np.asarray(self.requests[rid].tokens,
+                                          np.int32)
+        if rids:
+            return {rid: drained[rid] for rid in rids}
+        return drained
+
+    def stream(self, requests=()):
+        """Streaming iterator over ``(rid, token, done)`` triples, in the
+        order tokens are produced across interleaved scheduler ticks."""
+        for r in requests:
+            self.submit(*self._split(r))
+        while self.sched.has_work:
+            out = self.step()
+            # a request can land 2 tokens in one tick (prefill + fused
+            # decode); only its LAST token carries the done flag
+            last = {rid: i for i, (rid, _) in enumerate(out["new_tokens"])}
+            done = set(out["finished"])
+            for i, (rid, tok) in enumerate(out["new_tokens"]):
+                yield rid, tok, rid in done and last[rid] == i
+
+    @staticmethod
+    def _split(r):
+        if isinstance(r, tuple) and len(r) == 2 \
+                and isinstance(r[1], SamplingParams):
+            return r
+        return r, None
+
+    # ------------------------------------------------------- deprecated shim
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 16,
                  temperature: float = 0.0) -> np.ndarray:
-        """prompts: (B, S) int32 (right-aligned, no padding support needed
-        for equal-length batches). Returns (B, max_new_tokens)."""
+        """Deprecated one-shot API: prompts (B, S) -> (B, max_new_tokens).
+
+        Thin shim over ``submit``/``step`` keeping the legacy observability
+        contract: the whole call runs inside ONE child session (per-call,
+        not per-request), whose reports land in ``request_reports``."""
+        warnings.warn(
+            "ServeEngine.generate() is deprecated; use the request-"
+            "lifecycle API — engine.submit(prompt, SamplingParams(...)) + "
+            "engine.step()/run()/stream()",
+            DeprecationWarning, stacklevel=2)
+        prompts = np.asarray(prompts)
         if self._handler is not None:
             # legacy pinned-handler path: emit directly, no child session
-            return self._generate(self._handler, prompts, max_new_tokens,
-                                  temperature)
+            return self._generate_batch(prompts, max_new_tokens, temperature)
         parent = self.session or pasta.current_session()
-        rid = next(self._req_ids)
-        # tools default to none, NOT the PASTA_TOOL env fallback — a
-        # request pipeline is only built when the engine asked for one
+        cid = next(self._call_ids)
         with parent.child(tools=self.request_tools or (),
-                          name=f"{parent.name}/request{rid}") as req:
-            out = self._generate(req.handler, prompts, max_new_tokens,
-                                 temperature)
+                          name=f"{parent.name}/request{cid}") as call:
+            prev = self._route_handler
+            self._route_handler = call.handler
+            try:
+                out = self._generate_batch(prompts, max_new_tokens,
+                                           temperature)
+            finally:
+                self._route_handler = prev
         if self.request_tools:
-            self.request_reports.append(req.reports())
-        req.close()       # drop the per-request pipeline (reports kept)
+            self.request_reports.append(call.reports())
+        call.close()       # drop the per-call pipeline (reports kept)
         return out
 
-    def _generate(self, handler, prompts, max_new_tokens: int,
-                  temperature: float) -> np.ndarray:
-        handler.operator_start("serve.prefill",
-                               batch=int(prompts.shape[0]),
-                               prompt_len=int(prompts.shape[1]))
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
-        cache = _pad_cache_to(cache, self.cfg, self.max_seq)
-        handler.operator_end("serve.prefill")
-        out = []
-        tok = self._sample(logits, temperature)
-        out.append(tok)
-        for i in range(max_new_tokens - 1):
-            handler.operator_start("serve.decode", step=i)
-            logits, cache = self._decode(self.params, cache, tok[:, None])
-            tok = self._sample(logits, temperature)
-            out.append(tok)
-            handler.operator_end("serve.decode")
-        return np.asarray(jnp.stack(out, axis=1))
+    def _generate_batch(self, prompts, max_new_tokens: int,
+                        temperature: float) -> np.ndarray:
+        prev = self._per_request_sessions
+        self._per_request_sessions = False
+        try:
+            params = SamplingParams(max_new_tokens=max_new_tokens,
+                                    temperature=temperature)
+            rids = [self.submit(p, params) for p in prompts]
+            done: dict = {}
+            while self.sched.has_work:
+                for rid in self.step()["finished"]:
+                    done[rid] = np.asarray(self.requests[rid].tokens,
+                                           np.int32)
+        finally:
+            self._per_request_sessions = prev
+        return np.stack([done[r] for r in rids])

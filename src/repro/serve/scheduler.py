@@ -1,0 +1,153 @@
+"""Continuous-batching scheduler: FCFS admission over a fixed slot set.
+
+The scheduler owns request lifecycle bookkeeping and nothing device-side:
+``waiting`` is an arrival-ordered queue, ``running`` maps KV-pool slot →
+request, and admission (:meth:`Scheduler.admit`) moves requests FCFS into
+free slots — the engine prefills them into those slots the same tick.
+Retirement (:meth:`Scheduler.release`) returns the slot to the allocator;
+the pool bytes are reused in place by the next admission.
+
+Ragged prompt handling is right-padding: :func:`pad_group` pads a cold
+admission group to a shared power-of-two bucket.  Causality makes the pad
+exact — a right-pad token can only influence positions after it, all of
+which are discarded — so a padded group prefill produces bit-identical
+per-row K/V and logits to each request prefilling alone.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import time
+
+import numpy as np
+
+from .cache import bucket
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy (immutable: safe to share across requests)."""
+
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    stop_token: int | None = None
+    #: per-request RNG seed for temperature>0 sampling; ``None`` derives a
+    #: key from the engine seed and the request id, so sampled streams are
+    #: independent of how requests happen to batch together
+    seed: int | None = None
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One served generation: prompt + params + lifecycle bookkeeping."""
+
+    rid: int
+    prompt: np.ndarray
+    params: SamplingParams
+    state: RequestState = RequestState.QUEUED
+    slot: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    #: prompt tokens skipped at prefill via the prefix cache
+    cached_tokens: int = 0
+    submit_time: float = 0.0
+    admit_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+    #: per-request child pasta.Session spanning the whole lifetime
+    session: object = None
+    #: transient: prefix-cache entry chosen at admission
+    prefix_kv: dict | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        if len(self.tokens) >= self.params.max_new_tokens:
+            return True
+        stop = self.params.stop_token
+        return stop is not None and len(self.tokens) > 0 \
+            and self.tokens[-1] == stop
+
+
+class Scheduler:
+    """FCFS continuous batching: admit into free slots, release on retire."""
+
+    def __init__(self, max_slots: int):
+        self.max_slots = max_slots
+        self.waiting: collections.deque = collections.deque()
+        self.running: dict = {}                 # slot -> Request
+        self._free = list(range(max_slots - 1, -1, -1))   # pop() -> ascending
+
+    # -------------------------------------------------------------- queries
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.running)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: Request) -> None:
+        req.submit_time = req.submit_time or time.perf_counter()
+        self.waiting.append(req)
+
+    def admit(self) -> list:
+        """Move waiting requests FCFS into free slots; returns the admitted
+        requests with ``slot``/``state``/``admit_time`` assigned."""
+        out = []
+        now = time.perf_counter()
+        while self.waiting and self._free:
+            req = self.waiting.popleft()
+            req.slot = self._free.pop()
+            req.state = RequestState.RUNNING
+            req.admit_time = now
+            self.running[req.slot] = req
+            out.append(req)
+        return out
+
+    def release(self, req: Request) -> None:
+        """Retire: free the request's slot (pool bytes reused in place)."""
+        if req.slot is None or self.running.get(req.slot) is not req:
+            raise ValueError(f"request {req.rid} does not hold a slot")
+        del self.running[req.slot]
+        self._free.append(req.slot)
+        self._free.sort(reverse=True)           # deterministic ascending pops
+        req.slot = None
+        req.state = RequestState.FINISHED
+        req.finish_time = time.perf_counter()
+
+
+def pad_group(prompts: list, pow2: bool = True):
+    """Right-pad ragged prompts to a shared length.
+
+    Returns ``(tokens (G, S) int32, lens (G,) int32)`` with ``S`` the
+    power-of-two bucket of the longest prompt (``pow2=False``: exact max) —
+    bucketing bounds distinct prefill compile shapes to O(log max_seq).
+    """
+    lens = np.asarray([len(p) for p in prompts], np.int32)
+    s = int(lens.max())
+    if pow2:
+        s = bucket(s)
+    toks = np.zeros((len(prompts), s), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    return toks, lens

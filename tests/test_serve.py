@@ -1,0 +1,383 @@
+"""Request-lifecycle serving: continuous batching, slotted KV cache with
+prefix reuse, per-request PASTA reports.
+
+The load-bearing guarantees:
+
+  * ``engine.run()`` over staggered ragged requests produces byte-identical
+    tokens to per-request solo runs at temperature 0 (right-padding and the
+    fused ragged decode are exact, per family);
+  * prefix-cache-hit decode matches cold-prefill decode token-for-token;
+  * the ``serving`` tool reports occupancy > 1 and a nonzero prefix hit
+    rate on a shared-prefix workload;
+  * ``generate()`` survives as a shim under a DeprecationWarning;
+  * ``Session.close()`` is idempotent and keeps reports readable (the
+    engine closes request sessions that already exited their context).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.configs as C
+import repro.core as pasta
+from repro.core.events import Event, EventKind
+from repro.models import init_params
+from repro.serve import (PrefixCache, SamplingParams, Scheduler, ServeEngine)
+from repro.serve.scheduler import Request, RequestState, pad_group
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _ragged_prompts(cfg, lens, seed=0, shared_prefix=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, (shared_prefix,),
+                          dtype=np.int32)
+    return [np.concatenate([prefix,
+                            rng.integers(0, cfg.vocab_size, (n,),
+                                         dtype=np.int32)])
+            for n in lens]
+
+
+def _solo(cfg, params, prompt, max_new, **engine_kw):
+    eng = ServeEngine(cfg, params, **engine_kw)
+    out = eng.run([(prompt, SamplingParams(max_new_tokens=max_new))])
+    return list(out.values())[0]
+
+
+# --------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("arch", ["paper-gpt2", "mamba2-2.7b", "zamba2-7b"])
+def test_run_staggered_ragged_matches_solo_generate(arch):
+    """≥8 staggered ragged requests on 4 slots == per-request solo runs,
+    token-for-token at temperature 0 (dense, SSM, and hybrid families)."""
+    cfg = C.reduced(C.get(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lens = (9, 17, 5, 12, 23, 7, 14, 10)
+    prompts = _ragged_prompts(cfg, lens)
+    sp = SamplingParams(max_new_tokens=5)
+
+    eng = ServeEngine(cfg, params, max_seq=48, max_slots=4)
+    # staggered arrival: 5 up front, 3 mid-flight
+    rids = [eng.submit(p, sp) for p in prompts[:5]]
+    eng.step()
+    rids += [eng.submit(p, sp) for p in prompts[5:]]
+    while eng.sched.has_work:
+        eng.step()
+
+    for rid, prompt in zip(rids, prompts):
+        got = np.asarray(eng.requests[rid].tokens, np.int32)
+        want = _solo(cfg, params, prompt, 5, max_seq=48, max_slots=4)
+        np.testing.assert_array_equal(got, want, err_msg=f"rid={rid}")
+    assert eng.sched.n_active == 0 and eng.sched.n_free == 4
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "zamba2-7b"])
+def test_stateful_families_match_exact_length_reference(arch):
+    """SSM/hybrid prefill must run at EXACT prompt length: pad tokens would
+    update the carried recurrent state (unlike masked attention KV), so
+    serving output is pinned to a direct forward() prefill+decode reference,
+    not just to another engine run padded the same way."""
+    import jax.numpy as jnp
+    from repro.models import forward
+    from repro.serve.engine import _pad_cache_to
+
+    cfg = C.reduced(C.get(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    (prompt,) = _ragged_prompts(cfg, (9,))      # deliberately non-pow2
+    logits, cache = forward(params, jnp.asarray(prompt[None, :]), cfg,
+                            return_cache=True, logits_mode="last")
+    cache = _pad_cache_to(cache, cfg, 48)
+    want = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(4):
+        logits, cache = forward(params, jnp.asarray([[want[-1]]]), cfg,
+                                cache=cache, logits_mode="last")
+        want.append(int(jnp.argmax(logits[0, -1])))
+    got = _solo(cfg, params, prompt, 5, max_seq=48, max_slots=2)
+    np.testing.assert_array_equal(got, np.asarray(want, np.int32))
+
+
+def test_prefix_cache_hit_matches_cold_prefill():
+    """A request whose prompt prefix matches a cached one skips those
+    prefill tokens and still decodes byte-identically to a cold engine."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    p1 = np.concatenate([base, rng.integers(0, cfg.vocab_size, (6,),
+                                            dtype=np.int32)])
+    p2 = np.concatenate([base, rng.integers(0, cfg.vocab_size, (11,),
+                                            dtype=np.int32)])
+
+    warm = ServeEngine(cfg, params, max_seq=64, max_slots=2, prefix_block=16)
+    warm.run([(p1, SamplingParams(max_new_tokens=5))])
+    out_hit = list(warm.run([(p2, SamplingParams(max_new_tokens=5))])
+                   .values())[0]
+    stats = warm.prefix_cache.stats()
+    assert stats["hits"] == 1 and stats["reused_tokens"] == 32, stats
+
+    out_cold = _solo(cfg, params, p2, 5, max_seq=64, max_slots=2,
+                     prefix_cache=False)
+    np.testing.assert_array_equal(out_hit, out_cold)
+
+
+def test_identical_prompt_reuses_all_but_last_block():
+    """Re-serving the same prompt hits the longest stored proper prefix."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    (prompt,) = _ragged_prompts(cfg, (33,), seed=2)
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=2, prefix_block=8)
+    first = list(eng.run([(prompt, SamplingParams(max_new_tokens=4))])
+                 .values())[0]
+    again = list(eng.run([(prompt, SamplingParams(max_new_tokens=4))])
+                 .values())[0]
+    np.testing.assert_array_equal(first, again)
+    assert eng.prefix_cache.stats()["reused_tokens"] == 32   # last block cold
+
+
+# ----------------------------------------------------------------- scheduler
+def test_scheduler_fcfs_admission_and_slot_reuse():
+    sched = Scheduler(max_slots=2)
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32),
+                    params=SamplingParams()) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    admitted = sched.admit()
+    assert [r.rid for r in admitted] == [0, 1]          # FCFS
+    assert [r.slot for r in admitted] == [0, 1]
+    assert sched.admit() == [] and sched.n_queued == 2  # slots exhausted
+    sched.release(reqs[0])
+    assert reqs[0].state is RequestState.FINISHED
+    nxt = sched.admit()
+    assert [r.rid for r in nxt] == [2] and nxt[0].slot == 0   # slot reused
+    with pytest.raises(ValueError):
+        sched.release(reqs[0])                          # double release
+
+
+def test_pad_group_right_pads_to_pow2_bucket():
+    toks, lens = pad_group([np.arange(5, dtype=np.int32),
+                            np.arange(11, dtype=np.int32)])
+    assert toks.shape == (2, 16) and lens.tolist() == [5, 11]
+    assert toks[0, 5:].sum() == 0 and toks[1, :11].tolist() == list(range(11))
+
+
+def test_prefix_cache_store_block_keys_and_lru():
+    pc = PrefixCache(block=4, capacity=3)
+    kv = {"k": np.arange(2 * 10 * 3).reshape(2, 10, 3, 1).astype(np.float32),
+          "v": np.zeros((2, 10, 3, 1), np.float32)}
+    toks = np.arange(10, dtype=np.int32)
+    pc.insert(toks, kv)                      # keys at L=4, 8, 10 -> capacity 3
+    hit_len, ent = pc.lookup(np.concatenate([toks[:8],
+                                             np.asarray([99], np.int32)]))
+    assert hit_len == 8
+    np.testing.assert_array_equal(ent["k"], kv["k"][:, :8])
+    miss_len, _ = pc.lookup(np.asarray([7, 7, 7, 7], np.int32))
+    assert miss_len == 0
+    pc.insert(np.asarray([5, 6, 7, 8], np.int32),
+              {"k": kv["k"][:, :4], "v": kv["v"][:, :4]})   # evicts LRU
+    assert len(pc) <= 3
+
+
+def test_prefill_bucket_larger_than_max_seq_is_cropped():
+    """A prompt whose pow2 pad bucket exceeds max_seq still inserts (the
+    slot write crops right-pad junk to the pool's seq dim)."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    (prompt,) = _ragged_prompts(cfg, (33,))     # bucket(33)=64 > max_seq=40
+    out = _solo(cfg, params, prompt, 4, max_seq=40, max_slots=2)
+    big = _solo(cfg, params, prompt, 4, max_seq=64, max_slots=2)
+    np.testing.assert_array_equal(out, big)
+
+
+def test_submit_validation():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_seq=16, max_slots=1)
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(np.zeros((2, 4), np.int32))
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(np.zeros(12, np.int32), SamplingParams(max_new_tokens=8))
+
+
+def test_stop_token_ends_request_early():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    (prompt,) = _ragged_prompts(cfg, (9,))
+    ref = _solo(cfg, params, prompt, 8, max_seq=32, max_slots=1)
+    stop = int(ref[2])
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=1)
+    out = list(eng.run([(prompt, SamplingParams(max_new_tokens=8,
+                                                stop_token=stop))])
+               .values())[0]
+    np.testing.assert_array_equal(out, ref[:3])
+
+
+# ------------------------------------------------------------- observability
+def test_serving_tool_occupancy_and_prefix_hits():
+    """Fleet report on a shared-prefix staggered workload: occupancy > 1
+    and a nonzero prefix-cache hit rate (the acceptance scenario)."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (3, 9, 5, 14, 7, 11, 4, 8),
+                              shared_prefix=24)
+    sp = SamplingParams(max_new_tokens=6)
+    with pasta.Session(tools="serving", name="fleet") as sess:
+        eng = ServeEngine(cfg, params, max_seq=64, max_slots=4, session=sess,
+                          request_tools="serving")
+        for p in prompts[:5]:
+            eng.submit(p, sp)
+        eng.step()
+        for p in prompts[5:]:
+            eng.submit(p, sp)
+        while eng.sched.has_work:
+            eng.step()
+    rep = sess.reports()["serving"].data
+    assert rep["requests"] == 8 and rep["finished"] == 8
+    assert rep["generated_tokens"] == 8 * 6
+    assert rep["occupancy"]["mean"] > 1 and rep["occupancy"]["slots"] == 4
+    assert rep["prefix_cache"]["hit_rate"] > 0
+    assert rep["ttft_s"]["p90"] >= rep["ttft_s"]["p50"] > 0
+    assert rep["tpot_s"]["mean"] > 0
+    # per-request child sessions: one isolated report per request, closed
+    assert len(eng.request_reports) == 8
+    assert sess.children == []
+    one = list(eng.request_reports)[0]["serving"]
+    assert one["requests"] == 1 and one["ttft_s"]["mean"] > 0
+
+
+def test_request_session_spans_lifetime_across_steps():
+    """A request's child session sees its submit AND its finish even though
+    other requests' steps interleave in between."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (8, 8, 8))
+    with pasta.Session(tools=(), name="eng") as sess:
+        eng = ServeEngine(cfg, params, max_seq=32, max_slots=1,
+                          request_tools="serving", session=sess)
+        eng.run([(p, SamplingParams(max_new_tokens=3)) for p in prompts])
+    assert len(eng.request_reports) == 3
+    for rep in eng.request_reports:
+        d = rep["serving"].data
+        assert d["requests"] == 1 and d["finished"] == 1
+        assert d["by_request"][next(iter(d["by_request"]))]["n_tokens"] == 3
+
+
+# ------------------------------------------------------------ generate() shim
+def test_generate_shim_deprecated_but_equivalent():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = np.stack(_ragged_prompts(cfg, (12, 12, 12)))
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=4)
+    with pytest.warns(DeprecationWarning, match="request-"):
+        out = eng.generate(prompts, max_new_tokens=5)
+    assert out.shape == (3, 5)
+    eng2 = ServeEngine(cfg, params, max_seq=32, max_slots=4)
+    want = eng2.run([(p, SamplingParams(max_new_tokens=5)) for p in prompts])
+    np.testing.assert_array_equal(out, np.stack(list(want.values())))
+
+
+# --------------------------------------------------- session close regression
+def test_session_close_is_idempotent_and_reports_survive():
+    """Regression for the engine's with-block + explicit-close pattern:
+    closing an exited session (or closing twice) must be a no-op, and
+    reports must stay readable after close."""
+    with pasta.Session(tools="kernel_freq", name="s") as s:
+        s.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="k",
+                             attrs={"count": 3}))
+    s.close()
+    s.close()                                   # double close: no-op
+    assert s.closed
+    rep = s.reports()                           # readable after close
+    assert rep["kernel_freq"]["total_invocations"] == 3
+    with pytest.raises(RuntimeError):
+        with s:                                 # closed sessions don't reopen
+            pass
+
+
+def test_buffered_session_close_flushes_pending_rows():
+    """close() without exiting the context must not drop buffered rows."""
+    s = pasta.Session(tools="kernel_freq", buffered=True,
+                      buffer_capacity=64, name="buf")
+    s.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="k",
+                         attrs={"count": 5}))
+    s.close()                                   # never entered / exited
+    assert s.reports()["kernel_freq"]["total_invocations"] == 5
+
+
+def test_close_inside_with_block_is_safe():
+    with pasta.Session(tools="kernel_freq", name="inner") as s:
+        s.handler.emit(Event(EventKind.KERNEL_LAUNCH, name="k"))
+        s.close()                               # close before __exit__
+    assert s.reports()["kernel_freq"]["total_invocations"] == 1
+
+
+# ------------------------------------------------------------------- streaming
+def test_stream_yields_tokens_in_production_order():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (6, 10))
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=2)
+    seen = {0: [], 1: []}
+    done = set()
+    for rid, tok, fin in eng.stream(
+            [(p, SamplingParams(max_new_tokens=4)) for p in prompts]):
+        seen[rid].append(tok)
+        if fin:
+            done.add(rid)
+    assert done == {0, 1}
+    for rid, prompt in enumerate(prompts):
+        want = _solo(cfg, params, prompt, 4, max_seq=32, max_slots=2)
+        np.testing.assert_array_equal(np.asarray(seen[rid], np.int32), want)
+
+
+def test_retired_request_pruning_does_not_lose_run_results():
+    """run() larger than max_retained_requests must still return every
+    request's tokens (snapshotted at retirement, before FIFO pruning)."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (8,) * 6)
+    eng = ServeEngine(cfg, params, max_seq=16, max_slots=2,
+                      max_retained_requests=2)
+    out = eng.run([(p, SamplingParams(max_new_tokens=2)) for p in prompts])
+    assert sorted(out) == list(range(6))
+    assert all(len(t) == 2 for t in out.values())
+    # host bookkeeping stays bounded: only the retained tail survives
+    assert len(eng.requests) <= 2
+
+
+def test_stream_done_flag_marks_only_last_token():
+    """A request can land two tokens in one tick (prefill + fused decode);
+    only the LAST one may carry done=True."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    (prompt,) = _ragged_prompts(cfg, (8,))
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=1)
+    events = list(eng.stream([(prompt, SamplingParams(max_new_tokens=2))]))
+    assert [fin for _, _, fin in events] == [False, True]
+
+
+# ----------------------------------------------------------------- CLI driver
+def test_serve_driver_cli_json(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    path = tmp_path / "serve.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--reduced",
+         "--num-requests", "4", "--max-slots", "2", "--prompt-len", "16",
+         "--shared-prefix", "12", "--prefix-block", "8",
+         "--max-new-tokens", "4", "--json", str(path)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr
+    out = json.loads(path.read_text())
+    assert out["status"] == "ok" and out["driver"] == "serve"
+    assert out["summary"]["generated_tokens"] == 16
+    assert out["summary"]["occupancy_mean"] > 1
+    assert out["summary"]["prefix_hit_rate"] > 0
+    assert out["summary"]["ttft_s"]["p50"] > 0
+    assert len(out["requests"]) == 4            # per-request serving reports
+    assert set(map(int, out["tokens"]))== {0, 1, 2, 3}
+    assert "serving" in out["fleet"] and "kernel_freq" in out["fleet"]
