@@ -1,14 +1,24 @@
-"""Serving occupancy sweep: continuous batching vs slot budget.
+"""Serving occupancy sweep + chunked-prefill stall bound.
 
 The simulation-first xPU-analysis argument (Fake Runs, Real Fixes): batch
 occupancy and goodput are THE serving quantities, so measure them under a
-controlled trace instead of eyeballing throughput.  A fixed staggered
-shared-prefix trace (ragged prompts, one mid-flight arrival wave) runs
-against ``max_slots ∈ {1, 2, 4}``; for each point the fleet ``serving``
-tool reports mean decode occupancy, token throughput, TTFT/TPOT, and the
-prefix-cache hit rate.  More slots must monotonically raise mean occupancy
-(that's the continuous-batching contract — asserted), and the shared-prefix
-workload must produce nonzero prefix reuse.
+controlled trace instead of eyeballing throughput.  Two sections:
+
+* **Occupancy sweep** — a fixed staggered shared-prefix trace (ragged
+  prompts, one mid-flight arrival wave) runs against ``max_slots ∈ {1, 2,
+  4}``; for each point the fleet ``serving`` tool reports mean decode
+  occupancy, token throughput, TTFT/TPOT, prefix-cache hit rate, and the
+  paged pool's duplicate-copy bytes (asserted zero: the prefix store
+  aliases pool blocks).  More slots must monotonically raise mean occupancy
+  (that's the continuous-batching contract — asserted), and the
+  shared-prefix workload must produce nonzero prefix reuse.
+
+* **Chunked prefill** — one long cold prompt lands next to short decoding
+  requests, chunked vs unchunked.  Chunking must bound the prefill work any
+  single decode tick absorbs to one chunk (token bound asserted — it is
+  deterministic), and the measured per-tick stall seconds are recorded so
+  the snapshot shows the longest decode-tick stall staying below one
+  whole-prompt prefill.
 
 Part of ``benchmarks.run --smoke``; payload snapshotted to
 ``BENCH_serve.json`` at the repo root for the per-PR perf trajectory.
@@ -79,6 +89,8 @@ def occupancy_sweep(arch: str = "paper-gpt2") -> dict:
             "tpot_p50_s": rep["tpot_s"]["p50"],
             "prefix_hit_rate": rep["prefix_cache"]["hit_rate"],
             "prefix_reused_frac": rep["prefix_cache"]["reused_frac"],
+            "pool_utilization_max": rep["pool"]["utilization_max"],
+            "duplicate_copy_bytes": rep["pool"]["duplicate_copy_bytes"],
         }
         points.append(point)
         common.row(f"serve_slots{slots}",
@@ -90,17 +102,77 @@ def occupancy_sweep(arch: str = "paper-gpt2") -> dict:
     assert occ == sorted(occ), f"occupancy must rise with slots: {occ}"
     assert occ[-1] > 1, occ
     assert any(p["prefix_hit_rate"] > 0 for p in points), points
-    payload = {
+    assert all(p["duplicate_copy_bytes"] == 0 for p in points), points
+    return {
         "arch": arch, "n_requests": N_REQUESTS, "max_new_tokens": MAX_NEW,
         "shared_prefix": SHARED_PREFIX, "sweep": points,
     }
+
+
+LONG_PROMPT = 96
+CHUNK = 16
+
+
+def chunked_prefill(arch: str = "paper-gpt2") -> dict:
+    """One long cold prompt beside short decoders, chunked vs unchunked."""
+    import jax
+
+    import repro.configs as C
+    import repro.core as pasta
+    from repro.models import init_params
+    from repro.serve import SamplingParams, ServeEngine
+
+    cfg = C.reduced(C.get(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    long_p = rng.integers(0, cfg.vocab_size, (LONG_PROMPT,), dtype=np.int32)
+    shorts = [rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+              for _ in range(2)]
+
+    points = {}
+    for label, chunk in (("unchunked", None), ("chunked", CHUNK)):
+        with pasta.Session(tools="serving", name=f"bench/{label}") as sess:
+            eng = ServeEngine(cfg, params, max_seq=128, max_slots=3,
+                              session=sess, prefix_block=8,
+                              prefill_chunk=chunk)
+            t0 = time.perf_counter()
+            for p in shorts:
+                eng.submit(p, SamplingParams(max_new_tokens=16))
+            eng.step()                 # shorts admit + start decoding first
+            eng.submit(long_p, SamplingParams(max_new_tokens=8))
+            while eng.sched.has_work:
+                eng.step()
+            wall = time.perf_counter() - t0
+        rep = sess.reports()["serving"].data
+        points[label] = {
+            "prefill_chunk": chunk,
+            "wall_s": wall,
+            "max_prefill_tokens_per_tick":
+                rep["prefill"]["max_tokens_per_tick"],
+            "max_prefill_stall_s": rep["prefill"]["max_stall_s"],
+            "chunked_events": rep["prefill"]["chunked_events"],
+            "occupancy_mean": rep["occupancy"]["mean"],
+        }
+        common.row(f"serve_prefill_{label}",
+                   points[label]["max_prefill_stall_s"] * 1e6,
+                   f"max_tokens/tick={points[label]['max_prefill_tokens_per_tick']}")
+
+    # the token bound is deterministic: chunking caps per-tick prefill work
+    # at one chunk, the unchunked run absorbs the whole prompt in one tick
+    assert points["chunked"]["max_prefill_tokens_per_tick"] <= CHUNK
+    assert points["unchunked"]["max_prefill_tokens_per_tick"] >= LONG_PROMPT
+    # stall seconds are recorded (timing, not asserted: CI machines vary)
+    return points
+
+
+def main(**kw) -> dict:
+    payload = occupancy_sweep(**kw)
+    payload["chunked_prefill"] = chunked_prefill(**kw)
     common.save("fig_serve", payload)
     return payload
 
 
-def main(**kw) -> dict:
-    return occupancy_sweep(**kw)
-
-
 if __name__ == "__main__":
     main()
+    from . import run
+    run.snapshot()        # refresh the repo-root BENCH_serve.json snapshot

@@ -13,7 +13,15 @@ deployment is judged on:
   * the **batch-occupancy timeline** (active slots per fused decode tick)
     and its mean — decode goodput relative to the slot budget,
   * **prefix-cache reuse**: hit rate over admissions and the fraction of
-    prompt tokens skipped at prefill.
+    prompt tokens skipped at prefill (admissions and cache lookups are 1:1
+    in the engine, so this hit rate and ``PrefixCache.stats()`` share the
+    same denominator),
+  * **prefill-stall accounting**: the prefill work inserted between
+    consecutive fused decode ticks, as tokens and seconds — chunked prefill
+    exists to bound exactly this quantity,
+  * **paged-pool utilization**: block-pool occupancy sampled at every
+    decode tick, plus the bytes duplicated for the prefix store (zero on
+    the paged path, where the store aliases pool blocks).
 
 Attached to the engine's parent session it reports the fleet view; attached
 to a request's child session (``request_tools="serving"``) it reports that
@@ -50,7 +58,20 @@ class ServingTool(PastaTool):
         self.slots = 0
         self.prefill_events = 0
         self.prefill_tokens = 0
+        self.chunked_events = 0
         self.cached_tokens = 0
+        # per-tick prefill stall: prefill work inside one scheduler tick
+        # (the engine's serve.tick boundary event closes the window)
+        self._tick_prefill_tokens = 0
+        self._tick_prefill_s = 0.0
+        self._prefill_start: float | None = None
+        self.max_prefill_tokens_per_tick = 0
+        self.max_prefill_stall_s = 0.0
+        # paged-pool samples from decode-tick attrs
+        self.pool_n_blocks = 0
+        self.pool_util_max = 0.0
+        self.pool_store_blocks_max = 0
+        self.duplicate_copy_bytes = 0
         self.timeline: list = []           # (time, phase, active)
         self._t0: float | None = None
 
@@ -84,18 +105,49 @@ class ServingTool(PastaTool):
             self.occupancy_sum += active
             self.occupancy_max = max(self.occupancy_max, active)
             self.slots = int(a.get("slots", self.slots))
+            if "utilization" in a:
+                self.pool_n_blocks = int(a.get("n_blocks", 0))
+                self.pool_util_max = max(self.pool_util_max,
+                                         float(a["utilization"]))
+                self.pool_store_blocks_max = max(
+                    self.pool_store_blocks_max, int(a.get("store_blocks", 0)))
             if len(self.timeline) < self.timeline_limit:
                 self.timeline.append((ev.time - self._t0, "decode", active))
         elif name == "serve.prefill":
             self.prefill_events += 1
-            self.prefill_tokens += int(a.get("n_tokens", 0))
+            n = int(a.get("n_tokens", 0))
+            self.prefill_tokens += n
+            self._tick_prefill_tokens += n
+            self._prefill_start = ev.time
+            self.chunked_events += bool(a.get("chunked", False))
             self.cached_tokens += int(a.get("cached", 0))
             if len(self.timeline) < self.timeline_limit:
                 self.timeline.append((ev.time - self._t0, "prefill",
                                       int(a.get("group", 1))))
+        elif name == "serve.tick":
+            self._close_tick()
+
+    def on_operator_end(self, ev):
+        if ev.name == "serve.prefill":
+            if self._prefill_start is not None:
+                self._tick_prefill_s += ev.time - self._prefill_start
+                self._prefill_start = None
+            self.duplicate_copy_bytes += int(
+                ev.attrs.get("copied_bytes", 0))
+
+    def _close_tick(self) -> None:
+        """Fold the prefill work accumulated since the last decode dispatch
+        into the per-tick stall maxima."""
+        self.max_prefill_tokens_per_tick = max(
+            self.max_prefill_tokens_per_tick, self._tick_prefill_tokens)
+        self.max_prefill_stall_s = max(self.max_prefill_stall_s,
+                                       self._tick_prefill_s)
+        self._tick_prefill_tokens = 0
+        self._tick_prefill_s = 0.0
 
     # -------------------------------------------------------------- finalize
     def finalize(self) -> dict:
+        self._close_tick()       # a trailing prefill-only tick still counts
         ttft, tpot, queue, per_request = [], [], [], {}
         finished = 0
         generated = 0
@@ -143,7 +195,15 @@ class ServingTool(PastaTool):
                 "slots": self.slots,
             },
             "prefill": {"events": self.prefill_events,
-                        "tokens": self.prefill_tokens},
+                        "tokens": self.prefill_tokens,
+                        "chunked_events": self.chunked_events,
+                        "max_tokens_per_tick":
+                            self.max_prefill_tokens_per_tick,
+                        "max_stall_s": self.max_prefill_stall_s},
+            "pool": {"n_blocks": self.pool_n_blocks,
+                     "utilization_max": self.pool_util_max,
+                     "store_blocks_max": self.pool_store_blocks_max,
+                     "duplicate_copy_bytes": self.duplicate_copy_bytes},
             "prefix_cache": {
                 "admits": admits,
                 "hits": int(hits),

@@ -42,7 +42,21 @@ def _parse():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--prefix-block", type=int, default=16,
-                    help="prefix-cache key granularity (tokens)")
+                    help="prefix-cache key granularity (tokens); in paged "
+                         "mode this is also the KV block size")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="use the legacy dense (slots, max_seq) KV pool "
+                         "instead of the paged block pool")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="paged KV block width in tokens "
+                         "(default: --prefix-block)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="paged pool capacity in blocks (default: per-slot "
+                         "parity + 2 sequences of prefix-store headroom)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="per-tick prefill token budget shared across "
+                         "mid-prefill requests (bounds decode stalls; "
+                         "paged mode only)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--pasta-tools", default="serving,kernel_freq")
@@ -113,11 +127,15 @@ def main():
 
     with pasta.Session(tools=args.pasta_tools, name="serve") as session:
         params = init_params(jax.random.PRNGKey(args.seed), cfg)
+        paged = False if args.no_paged else None   # None = family default
         engine = ServeEngine(cfg, params, max_seq=max_seq,
                              max_slots=args.max_slots, session=session,
                              request_tools=args.request_tools or None,
                              prefix_cache=not args.no_prefix_cache,
                              prefix_block=args.prefix_block,
+                             paged=paged, block_size=args.block_size,
+                             n_blocks=args.n_blocks,
+                             prefill_chunk=args.prefill_chunk,
                              rng_seed=args.seed)
         t0 = time.perf_counter()
         pending = list(zip(arrivals, prompts))
@@ -141,8 +159,14 @@ def main():
         try:
             # fleet kernel_freq etc. see the fused decode step's compiled HLO
             import jax.numpy as jnp
+            if engine.paged:
+                span = engine.pool.blocks_per_seq * engine.pool.block_size
+                cache = engine.pool.cache_view(
+                    np.full((args.max_slots,), span, np.int32))
+            else:
+                cache = engine.pool.cache
             compiled = engine._decode.lower(
-                params, engine.pool.cache,
+                params, cache,
                 jnp.zeros((args.max_slots, 1), jnp.int32)).compile()
             session.capture_compiled(compiled, label="serve.decode",
                                      steps=max(engine.decode_steps, 1))
@@ -176,6 +200,9 @@ def main():
                 "max_new_tokens": args.max_new_tokens,
                 "temperature": args.temperature,
                 "prefix_cache": not args.no_prefix_cache,
+                "paged": engine.paged,
+                "block_size": engine.block_size,
+                "prefill_chunk": engine.prefill_chunk,
                 "seed": args.seed,
                 "mesh": args.mesh,
             },
@@ -191,6 +218,11 @@ def main():
                 "decode_steps": serving.get("decode_steps"),
                 "prefix_hit_rate": pc.get("hit_rate"),
                 "prefix_reused_frac": pc.get("reused_frac"),
+                "max_prefill_tokens_per_tick":
+                    serving.get("prefill", {}).get("max_tokens_per_tick"),
+                "max_prefill_stall_s":
+                    serving.get("prefill", {}).get("max_stall_s"),
+                "pool": engine.pool_stats(),
             },
             "fleet": {name: rep.data for name, rep in reports.items()},
             "requests": per_request,

@@ -270,6 +270,33 @@ def attention(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
         out = out.reshape(out.shape[0], out.shape[1], -1, out.shape[-1])
         new_cache = {"k": cache["k"], "v": cache["v"], "rk": rk, "rv": rv,
                      "length": lengths, "main_len": main_len}
+    elif "pk" in cache:
+        # paged decode/append: {"pk","pv": (n_blocks, bs, Hkv, D),
+        # "bt": (B, blocks_per_seq) int32 block tables (sentinel = n_blocks),
+        # "length": (B,)}.  New K/V scatter through each row's block table
+        # at absolute positions base..base+S-1; the softmax then gathers the
+        # row's window back as a contiguous (B, T) view — same values the
+        # dense slot layout would hold, so numerics match it exactly.
+        pk, pv, bt = cache["pk"], cache["pv"], cache["bt"]
+        base = cache["length"]
+        n_blocks, bs_blk = pk.shape[0], pk.shape[1]
+        b, s = x.shape[0], x.shape[1]
+        t = bt.shape[1] * bs_blk
+        pos = base[:, None] + jnp.arange(s)[None, :]             # (B,S)
+        col = jnp.minimum(pos // bs_blk, bt.shape[1] - 1)
+        blk = jnp.take_along_axis(bt, col, axis=1)               # (B,S)
+        # rows parked at length >= T (free slots, mid-prefill rows riding a
+        # fused decode) resolve to the sentinel: their writes drop
+        blk = jnp.where(pos < t, blk, n_blocks)
+        off = pos % bs_blk
+        pk = pk.at[blk, off].set(k, mode="drop")
+        pv = pv.at[blk, off].set(v, mode="drop")
+        k_cache = pk[bt].reshape(b, t, *pk.shape[2:])
+        v_cache = pv[bt].reshape(b, t, *pv.shape[2:])
+        lengths = base + s
+        out = _sdpa_decode(qg, k_cache, v_cache, lengths,
+                           base=base if s > 1 else None)
+        new_cache = {"pk": pk, "pv": pv, "bt": bt, "length": lengths}
     else:
         base = cache["length"]
         if x.shape[1] == 1:

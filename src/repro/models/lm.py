@@ -338,6 +338,9 @@ def _run_stacked_attn(params, h, cfg, positions, cache, return_cache=False):
         if "rk" in new_kv:
             # two-tier: the frozen main cache is NOT re-emitted (no rewrite)
             return hh2, {"rk": new_kv["rk"], "rv": new_kv["rv"]}
+        if "pk" in new_kv:
+            # paged: only the block pool is per-layer state
+            return hh2, {"pk": new_kv["pk"], "pv": new_kv["pv"]}
         return hh2, {"k": new_kv["k"], "v": new_kv["v"]}
 
     body = _remat(cfg, body)
@@ -348,8 +351,20 @@ def _run_stacked_attn(params, h, cfg, positions, cache, return_cache=False):
         length = jnp.full((h.shape[0],), h.shape[1], jnp.int32)
         return h, {"kv": {"k": kv["k"], "v": kv["v"], "length": length}}
     kv = cache["kv"]
-    n_layers = kv["k"].shape[0]
+    if "pk" in kv:
+        n_layers = kv["pk"].shape[0]
+    else:
+        n_layers = kv["k"].shape[0]
     bcast = lambda a: jnp.broadcast_to(a, (n_layers, *a.shape))  # noqa: E731
+    if "pk" in kv:
+        # paged: the block pool carries the layer axis; block tables and
+        # lengths are shared across layers (broadcast like lengths below)
+        per_layer = {"pk": kv["pk"], "pv": kv["pv"], "bt": bcast(kv["bt"]),
+                     "length": bcast(kv["length"])}
+        h, new_kv = jax.lax.scan(body, h, (layers, per_layer))
+        return h, {"kv": {"pk": new_kv["pk"], "pv": new_kv["pv"],
+                          "bt": kv["bt"],
+                          "length": kv["length"] + h.shape[1]}}
     per_layer = {"k": kv["k"], "v": kv["v"], "length": bcast(kv["length"])}
     if "rk" in kv:
         per_layer.update({"rk": kv["rk"], "rv": kv["rv"],

@@ -1,14 +1,15 @@
-"""Serving substrate: request-lifecycle engine over a slotted KV pool.
+"""Serving substrate: request-lifecycle engine over a paged KV block pool.
 
 ``ServeEngine.submit()/step()/run()/stream()`` is the continuous-batching
 API; ``generate()`` survives as a deprecated one-shot shim.  See
-``serve.scheduler`` (FCFS admission, ragged right-padding) and
-``serve.cache`` (KV slot pool, hash-keyed prefix reuse).
+``serve.scheduler`` (FCFS admission, ragged right-padding, chunked-prefill
+cursors) and ``serve.cache`` (paged block pool + block tables, legacy KV
+slot pool, hash-keyed zero-copy prefix reuse).
 """
 
 from .engine import ServeEngine
 from .scheduler import Request, RequestState, SamplingParams, Scheduler
-from .cache import KVSlotPool, PrefixCache
+from .cache import KVSlotPool, PagedKVPool, PrefixCache
 
 __all__ = ["ServeEngine", "Request", "RequestState", "SamplingParams",
-           "Scheduler", "KVSlotPool", "PrefixCache"]
+           "Scheduler", "KVSlotPool", "PagedKVPool", "PrefixCache"]

@@ -9,17 +9,31 @@ stale bytes from retired requests invisible.  Admitting a request is one
 donated-buffer ``dynamic_update_slice`` per leaf (:meth:`KVSlotPool.insert`);
 retiring is free (the slot index just returns to the allocator).
 
+:class:`PagedKVPool` replaces the dense rows for the KV-only (``dense``)
+family: one ``(n_layers, n_blocks, block_size, heads, head_dim)`` K/V block
+pool plus per-slot *block tables*, so live decode state and the prefix store
+reference the **same** device blocks.  A prefix hit is block-table aliasing
+plus a refcount bump — no device→host ``extract_kv`` copy ever sits on the
+prefill critical path, and publishing a finished prefill duplicates zero
+bytes.  Block sharing is write-safe by construction: prefix keys exist only
+at block-aligned lengths, so a hit's suffix (and all later decode appends)
+land in freshly-allocated blocks, never in a shared one.
+
 :class:`PrefixCache` is the cross-request reuse layer: completed prefills
 publish their prompt K/V under hash keys at block-aligned prefix lengths, and
 a new request whose prompt prefix matches a stored key skips prefilling those
-tokens — its slot is seeded with the stored K/V and only the suffix runs
-through the model (RoPE keys are absolute-position, so a shared prefix at
-positions ``0..L-1`` is bit-reusable).  Prefix reuse is KV-only: SSM/hybrid
-states summarize the whole prefix nonlinearly and are not block-addressable,
-so those families always prefill cold (hit rate 0 by construction).
+tokens (RoPE keys are absolute-position, so a shared prefix at positions
+``0..L-1`` is bit-reusable).  Entries are opaque: block-id tuples in paged
+mode (:meth:`PrefixCache.insert_blocks`, zero-copy) or host K/V views in the
+legacy dense-row mode (:meth:`PrefixCache.insert`).  Prefix reuse is
+KV-only: SSM/hybrid states summarize the whole prefix nonlinearly and are
+not block-addressable, so those families always prefill cold (hit rate 0 by
+construction).
 """
 
 from __future__ import annotations
+
+import collections
 
 import jax
 import jax.numpy as jnp
@@ -149,21 +163,209 @@ class KVSlotPool:
                        "length": jnp.asarray(length)}}
 
 
+class PagedKVPool:
+    """Paged KV block pool: one device block array + per-slot block tables.
+
+    Device state is a single ``(n_layers, n_blocks, block_size, heads,
+    head_dim)`` pool for K and V.  Host state is the allocator: a free list,
+    per-block refcounts (live request references + prefix-store references
+    counted separately so evictability is exact), and a ``(slots,
+    blocks_per_seq)`` block-table row per slot, sentinel-padded with
+    ``n_blocks`` (out-of-bounds → gathers clamp harmlessly, scatters drop).
+
+    Memory sharing is the point: a prefix hit binds the stored blocks into
+    the new slot's table (refcount bump, zero bytes moved), and publishing a
+    finished prefill retains the slot's own blocks under store keys —
+    ``duplicate_copy_bytes`` is 0 by construction.  Under block pressure the
+    allocator evicts LRU prefix-store entries via ``evict_cb``; blocks
+    referenced by a live request are never reclaimed.
+    """
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_seq: int,
+                 block_size: int = 16, n_blocks: int | None = None):
+        if cfg.kv_two_tier:
+            raise NotImplementedError(
+                "the paged serving pool manages raggedness itself; "
+                "kv_two_tier's frozen-main/recent-buffer split is a "
+                "long-context decode layout, not a block pool")
+        if cfg.family not in ("dense", "vlm", "audio", "moe"):
+            raise NotImplementedError(
+                "paged KV blocks are attention-only; SSM/hybrid state is "
+                "not block-addressable (use KVSlotPool)")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.blocks_per_seq = -(-max_seq // block_size)
+        #: default sizing: dense-pool parity per slot plus two sequences'
+        #: worth of headroom so the prefix store can retain blocks without
+        #: starving admission
+        self.n_blocks = (n_blocks if n_blocks is not None
+                         else (slots + 2) * self.blocks_per_seq)
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, self.n_blocks, block_size,
+                 cfg.n_kv_heads, cfg.head_dim)
+        self.pk = jnp.zeros(shape, dt)
+        self.pv = jnp.zeros(shape, dt)
+        self._free = list(range(self.n_blocks - 1, -1, -1))  # pop ascending
+        self._refs = np.zeros((self.n_blocks,), np.int32)
+        self._store_refs = np.zeros((self.n_blocks,), np.int32)
+        #: sentinel-filled block tables; gathers clamp, scatters drop
+        self.tables = np.full((slots, self.blocks_per_seq), self.n_blocks,
+                              np.int32)
+        self.evict_cb = None          # () -> bool, frees store blocks
+        self._insert = jax.jit(_paged_insert, donate_argnums=(0, 1),
+                               static_argnames=("crop",))
+
+    # -------------------------------------------------------- allocator
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def n_evictable(self) -> int:
+        """Blocks currently reclaimable by evicting prefix-store entries:
+        every reference on them is a store reference (no live request)."""
+        held = (self._refs > 0) & (self._refs == self._store_refs)
+        return int(held.sum())
+
+    def available(self) -> int:
+        return self.n_free + self.n_evictable()
+
+    def alloc(self, n: int) -> list | None:
+        """Allocate ``n`` fresh blocks (refcount 1 each), evicting LRU
+        prefix-store entries under pressure; ``None`` when the pool cannot
+        satisfy the request even after evicting everything evictable."""
+        while len(self._free) < n and self.evict_cb is not None \
+                and self.evict_cb():
+            pass
+        if len(self._free) < n:
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._refs[ids] += 1
+        return ids
+
+    def retain(self, ids, store: bool = False) -> None:
+        ids = list(ids)
+        self._refs[ids] += 1
+        if store:
+            self._store_refs[ids] += 1
+
+    def release(self, ids, store: bool = False) -> None:
+        for b in ids:
+            b = int(b)
+            self._refs[b] -= 1
+            if store:
+                self._store_refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+        self._free.sort(reverse=True)          # deterministic ascending pops
+
+    # ------------------------------------------------------- slot tables
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def bind_slot(self, slot: int, shared_ids, fresh_ids) -> None:
+        """Install a slot's block table: ``shared_ids`` (prefix-store
+        aliases, already retained by the caller) followed by ``fresh_ids``
+        (owned by this request)."""
+        row = list(shared_ids) + list(fresh_ids)
+        assert len(row) <= self.blocks_per_seq
+        self.tables[slot] = self.n_blocks
+        self.tables[slot, :len(row)] = row
+
+    def free_slot(self, slot: int) -> None:
+        """Release every real block the slot references (shared blocks just
+        drop this request's refcount; store references keep them alive)."""
+        row = self.tables[slot]
+        real = row[row < self.n_blocks]
+        self.release([int(b) for b in real])
+        self.tables[slot] = self.n_blocks
+
+    # ------------------------------------------------------ device views
+    def cache_view(self, lengths: np.ndarray, rows=None) -> dict:
+        """The cache pytree the model's paged attention consumes.  ``rows``
+        selects a subset of slots (e.g. one prefilling request); default is
+        the full slot set (the fused decode)."""
+        bt = self.tables if rows is None else self.tables[rows]
+        return {"kv": {"pk": self.pk, "pv": self.pv,
+                       "bt": jnp.asarray(bt),
+                       "length": jnp.asarray(lengths, jnp.int32)}}
+
+    def adopt(self, cache: dict) -> None:
+        """Re-own the (donated) pool arrays returned by a jitted step."""
+        self.pk = cache["kv"]["pk"]
+        self.pv = cache["kv"]["pv"]
+
+    def insert_prefill(self, src_cache: dict, slot: int, row: int) -> None:
+        """Scatter one row of a dense grouped-prefill cache into the slot's
+        blocks (crops the right-pad bucket to the table span)."""
+        ids = jnp.asarray(self.tables[slot])
+        span = self.blocks_per_seq * self.block_size
+        kv = src_cache["kv"]
+        self.pk, self.pv = self._insert(
+            self.pk, self.pv, kv["k"], kv["v"], jnp.int32(row), ids,
+            crop=min(span, kv["k"].shape[2]))
+
+    def stats(self) -> dict:
+        return {
+            "paged": True,
+            "n_blocks": self.n_blocks,
+            "block_size": self.block_size,
+            "blocks_used": self.n_used,
+            "blocks_free": self.n_free,
+            "store_blocks": int((self._store_refs > 0).sum()),
+            "utilization": self.n_used / self.n_blocks,
+        }
+
+
+def _paged_insert(pk, pv, src_k, src_v, row, ids, *, crop):
+    """Scatter row ``row`` of a dense prefill cache (n_layers, G, S, H, D)
+    into pool blocks ``ids`` ((blocks_per_seq,) int32, sentinel-padded —
+    sentinel scatters drop).  ``crop``: static token span to write."""
+    bs = pk.shape[2]
+    span = ids.shape[0] * bs
+
+    def put(pool, src):
+        sl = jax.lax.dynamic_slice_in_dim(src, row, 1, axis=1)[:, 0]
+        sl = sl[:, :crop]
+        if crop < span:
+            sl = jnp.pad(sl, [(0, 0), (0, span - crop), (0, 0), (0, 0)])
+        blocks = sl.reshape(sl.shape[0], ids.shape[0], bs, *sl.shape[2:])
+        return pool.at[:, ids].set(blocks.astype(pool.dtype), mode="drop")
+
+    return put(pk, src_k), put(pv, src_v)
+
+
 class PrefixCache:
     """Hash-keyed prompt-prefix store (block-aligned keys, LRU-bounded).
 
-    ``insert(tokens, kv)`` publishes a finished prefill under keys for every
-    ``block``-multiple prefix length plus the full prompt, all referencing
-    the same backing arrays (numpy views — no copies).  ``lookup(tokens)``
-    returns the longest stored prefix strictly shorter than the prompt (at
-    least one real token must run through the model to produce logits).
+    Entries are opaque values under ``(length, prefix_bytes)`` keys:
+
+    * :meth:`insert_blocks` (paged mode) publishes block-id tuples for every
+      ``block``-multiple prefix length — zero-copy aliases into the
+      :class:`PagedKVPool`, retained/evicted through the ``on_retain`` /
+      ``on_evict`` hooks so refcounts stay exact;
+    * :meth:`insert` (legacy dense-row mode) publishes host K/V array views
+      for every block-multiple length plus the full prompt.
+
+    ``lookup(tokens)`` returns the longest stored prefix strictly shorter
+    than the prompt (at least one real token must run through the model to
+    produce logits).  LRU order is an ``OrderedDict`` (``move_to_end`` on
+    touch — O(1), not the old O(n) ``list.remove``).  Stats discipline:
+    **only ``lookup()`` counts traffic**; ``covers()`` is a pure query (no
+    counter, no LRU touch), so ``stats()`` reflects exactly the admission
+    lookups the engine performed.
     """
 
-    def __init__(self, block: int = 16, capacity: int = 64):
+    def __init__(self, block: int = 16, capacity: int = 64, on_evict=None):
         self.block = block
         self.capacity = capacity
-        self._store: dict = {}          # (L, prefix_bytes) -> {"k","v"}
-        self._order: list = []          # LRU over keys
+        self.on_evict = on_evict        # entry -> None (paged: release ids)
+        self._store: collections.OrderedDict = collections.OrderedDict()
         self.lookups = 0
         self.hits = 0
         self.reused_tokens = 0
@@ -173,22 +375,19 @@ class PrefixCache:
         return len(self._store)
 
     def _touch(self, key) -> None:
-        if key in self._order:
-            self._order.remove(key)
-        self._order.append(key)
+        self._store.move_to_end(key)
 
-    def covers(self, tokens: np.ndarray) -> bool:
-        """True when this exact prompt was already published (its full-
-        length key exists — block keys are inserted alongside it), so a
-        re-insert would transfer identical KV for nothing."""
-        key = (len(tokens), tokens.tobytes())
-        if key in self._store:
-            self._touch(key)
-            return True
-        return False
+    def covers(self, tokens: np.ndarray, length: int | None = None) -> bool:
+        """Pure query: is the length-``length`` prefix (default: the full
+        prompt) already published?  Does NOT count as a lookup and does not
+        touch LRU recency — stats track admission traffic only."""
+        n = len(tokens) if length is None else length
+        if n <= 0:
+            return True                  # nothing to publish
+        return (n, tokens[:n].tobytes()) in self._store
 
     def lookup(self, tokens: np.ndarray):
-        """Longest-match lookup: ``(hit_len, {"k","v"}) | (0, None)``."""
+        """Longest-match lookup: ``(hit_len, entry) | (0, None)``."""
         self.lookups += 1
         n = len(tokens)
         self.prompt_tokens += n
@@ -203,17 +402,48 @@ class PrefixCache:
                 return L, ent
         return 0, None
 
+    def _put(self, key, entry) -> None:
+        self._store[key] = entry
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self.evict_one()
+
+    def evict_one(self) -> bool:
+        """Drop the LRU entry (``on_evict`` releases its blocks in paged
+        mode).  Returns False when the store is empty."""
+        if not self._store:
+            return False
+        _key, entry = self._store.popitem(last=False)
+        if self.on_evict is not None:
+            self.on_evict(entry)
+        return True
+
     def insert(self, tokens: np.ndarray, kv: dict) -> None:
-        """``kv``: {"k","v"} (n_layers, len(tokens), heads, head_dim)."""
+        """Legacy dense-row publish: ``kv`` {"k","v"} host arrays of shape
+        (n_layers, len(tokens), heads, head_dim); entries are views."""
         n = len(tokens)
         lens = {L for L in range(self.block, n, self.block)} | {n}
-        for L in lens:
+        for L in sorted(lens):
             key = (L, tokens[:L].tobytes())
-            self._store[key] = {"k": kv["k"][:, :L], "v": kv["v"][:, :L]}
-            self._touch(key)
-        while len(self._store) > self.capacity:
-            old = self._order.pop(0)
-            self._store.pop(old, None)
+            if key in self._store:
+                self._touch(key)
+                continue
+            self._put(key, {"k": kv["k"][:, :L], "v": kv["v"][:, :L]})
+
+    def insert_blocks(self, tokens: np.ndarray, ids, on_retain) -> None:
+        """Paged publish: for every block-multiple prefix length, store the
+        covering block-id tuple (``ids`` is the slot's table row).  New
+        entries call ``on_retain(entry)`` so the pool's store refcounts
+        stay exact; already-present keys are just touched."""
+        aligned = (len(tokens) // self.block) * self.block
+        for L in range(self.block, aligned + 1, self.block):
+            key = (L, tokens[:L].tobytes())
+            if key in self._store:
+                self._touch(key)
+                continue
+            entry = tuple(int(b) for b in ids[:L // self.block])
+            on_retain(entry)
+            self._put(key, entry)
 
     def stats(self) -> dict:
         return {

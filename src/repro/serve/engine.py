@@ -1,4 +1,4 @@
-"""Request-lifecycle serving engine: continuous batching over a KV slot pool.
+"""Request-lifecycle serving engine: continuous batching over a paged KV pool.
 
 The engine is a scheduler tick loop, not a one-shot call::
 
@@ -8,14 +8,26 @@ The engine is a scheduler tick loop, not a one-shot call::
         ...                                    # or: engine.run(requests)
 
 One :meth:`step` is one scheduler tick: admit waiting requests FCFS into
-free KV slots and prefill them (cold requests grouped with right-padding;
-prompts whose prefix matches the hash-keyed :class:`~repro.serve.cache.
-PrefixCache` skip the cached tokens and prefill only the suffix), then one
-fused decode step over *all* active slots (each row appends at its own
-length — see the per-row scatter in ``models.layers.attention``), then
-retire finished requests.  Heterogeneous traffic therefore shares every
-decode dispatch, and batch occupancy/goodput become measurable quantities
-instead of a fixed batch dimension.
+free KV slots (gated on block availability in paged mode), prefill them,
+then one fused decode step over *all* fully-prefilled slots, then retire
+finished requests.  Heterogeneous traffic therefore shares every decode
+dispatch, and batch occupancy/goodput become measurable quantities instead
+of a fixed batch dimension.
+
+KV memory for the ``dense`` family is **paged**
+(:class:`~repro.serve.cache.PagedKVPool`): one block pool plus per-slot
+block tables, so a prefix-cache hit aliases the stored blocks into the new
+request's table (refcount bump, zero bytes copied — no device→host
+``extract_kv`` round-trip on the prefill critical path) and publishing a
+finished prefill retains the slot's own blocks under store keys.  Long cold
+prefills optionally split into **chunks** across scheduler ticks
+(``prefill_chunk=``), bounding how long prefill work can stall co-resident
+decodes: ``prefill_chunk`` is a per-tick prefill token budget shared FCFS
+across all mid-prefill requests, spent through the per-query-causal
+multi-token append path before each fused decode — so the work between two
+decode dispatches never exceeds one chunk.  SSM/hybrid (and MoE) families
+keep the exact-length non-paged :class:`~repro.serve.cache.KVSlotPool`
+path — their recurrent state is not block-addressable.
 
 PASTA instrumentation is per request *across interleaved steps*: each
 submitted request opens a child :class:`~repro.core.Session` of the engine's
@@ -23,11 +35,15 @@ session at submit time and closes it at retirement, so its lifecycle events
 (``serve.request.submit/admit/first_token/finish``) and any per-request tool
 reports span queueing, prefill, and every fused decode tick it participated
 in, while the parent session aggregates the fleet view (the registered
-``serving`` tool turns those events into TTFT/TPOT, occupancy timeline, and
-prefix-hit-rate reports).
+``serving`` tool turns those events into TTFT/TPOT, occupancy timeline,
+prefix-hit-rate, block-pool-utilization and chunk-stall reports).
 
 ``generate(prompts)`` survives as a deprecated shim over ``submit``/``run``
 with the legacy observability contract (one child session per *call*).
+``abort(rid)`` cancels a request at any lifecycle stage, releasing its slot,
+its pool blocks and its child session; ``run``/``stream``/``generate`` abort
+all live requests if a tick raises, so a mid-drain failure cannot leak KV
+slots or leave sessions open forever.
 """
 
 from __future__ import annotations
@@ -46,15 +62,16 @@ import numpy as np
 import repro.core as pasta
 from repro.models import forward
 from repro.models.config import ModelConfig
-from .cache import KVSlotPool, PrefixCache, bucket
-from .scheduler import Request, SamplingParams, Scheduler, pad_group
+from .cache import KVSlotPool, PagedKVPool, PrefixCache, bucket
+from .scheduler import (Request, RequestState, SamplingParams, Scheduler,
+                        pad_group)
 
 #: families whose decode state is attention KV only — eligible for padded
-#: group prefill and prefix-cache reuse.  SSM/hybrid state summarizes the
-#: whole prefix nonlinearly (a pad token would mutate it, unlike masked KV)
-#: and MoE routing couples tokens, so those prefill alone at exact length.
-#: vlm/audio would qualify if tokenized, but their configs are
-#: embedding-frontend stubs with no autoregressive token loop to serve.
+#: group prefill, prefix-cache reuse, and the paged block pool.  SSM/hybrid
+#: state summarizes the whole prefix nonlinearly (a pad token would mutate
+#: it, unlike masked KV) and MoE routing couples tokens, so those prefill
+#: alone at exact length.  vlm/audio would qualify if tokenized, but their
+#: configs are embedding-frontend stubs with no autoregressive token loop.
 _KV_ONLY = ("dense",)
 
 
@@ -87,7 +104,10 @@ class ServeEngine:
                  session: "pasta.Session | None" = None,
                  rng_seed: int = 0, request_tools=None,
                  max_request_reports: int = 64, prefix_cache: bool = True,
-                 prefix_block: int = 16, max_retained_requests: int = 4096):
+                 prefix_block: int = 16, max_retained_requests: int = 4096,
+                 paged: bool | None = None, block_size: int | None = None,
+                 n_blocks: int | None = None,
+                 prefill_chunk: int | None = None):
         """``max_slots``: concurrent requests the KV pool holds; waiting
         requests queue FCFS.  ``session``: parent Session for per-request
         child sessions (innermost active session when omitted).
@@ -95,7 +115,15 @@ class ServeEngine:
         child session; reports land in ``request_reports`` at retirement.
         ``handler``: legacy pinned event sink — disables per-request
         sessions (compat path).  ``prefix_cache``: hash-keyed prompt-prefix
-        reuse (KV-only families; block-aligned keys of ``prefix_block``)."""
+        reuse (KV-only families; block-aligned keys of ``prefix_block``).
+        ``paged``: block-table KV layout (default: on for KV-only families,
+        impossible for SSM/hybrid).  ``block_size``: pool block width in
+        tokens (defaults to ``prefix_block`` so prefix hits alias whole
+        blocks).  ``n_blocks``: pool capacity (default: per-slot parity plus
+        two sequences of prefix-store headroom).  ``prefill_chunk``:
+        per-tick prefill token budget, shared FCFS across mid-prefill
+        requests (paged mode only; ``None`` = unbounded whole-prompt
+        prefills)."""
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "ServeEngine decodes token ids; embedding-frontend archs "
@@ -121,10 +149,45 @@ class ServeEngine:
         self.max_retained_requests = max(max_retained_requests, max_slots)
         self._retired: collections.deque = collections.deque()
         self.sched = Scheduler(max_slots)
-        self.pool = KVSlotPool(cfg, max_slots, max_seq)
-        self.prefix_cache = (PrefixCache(block=prefix_block)
-                             if prefix_cache and cfg.family in _KV_ONLY
-                             else None)
+
+        self.paged = (cfg.family in _KV_ONLY) if paged is None else paged
+        if self.paged and cfg.family not in _KV_ONLY:
+            raise ValueError(
+                f"paged KV serving requires a KV-only family, not "
+                f"{cfg.family!r} (SSM/hybrid state is not block-addressable)")
+        if prefill_chunk is not None and not self.paged:
+            raise ValueError("prefill_chunk requires the paged KV pool")
+        self.block_size = block_size if block_size is not None else \
+            (prefix_block if self.paged else 16)
+        if self.paged:
+            # prefix keys must sit on block boundaries so a hit aliases
+            # whole blocks and the suffix starts in a fresh one
+            prefix_block = self.block_size
+            self.pool = PagedKVPool(cfg, max_slots, max_seq,
+                                    block_size=self.block_size,
+                                    n_blocks=n_blocks)
+        else:
+            self.pool = KVSlotPool(cfg, max_slots, max_seq)
+        self.prefill_chunk = None
+        if prefill_chunk is not None:
+            # round up to a block multiple: chunk boundaries then coincide
+            # with block boundaries (tidy tables, O(log) tail shapes)
+            self.prefill_chunk = -(-prefill_chunk // self.block_size) \
+                * self.block_size
+        self.prefix_cache = None
+        if prefix_cache and cfg.family in _KV_ONLY:
+            on_evict = ((lambda ent: self.pool.release(ent, store=True))
+                        if self.paged else None)
+            self.prefix_cache = PrefixCache(block=prefix_block,
+                                            on_evict=on_evict)
+            if self.paged:
+                self.pool.evict_cb = self.prefix_cache.evict_one
+        #: host bytes copied to duplicate K/V for the prefix store — zero in
+        #: paged mode (the store aliases pool blocks), nonzero only on the
+        #: legacy extract_kv publish path
+        self.duplicate_copy_bytes = 0
+        self._prefilling: list = []          # paged requests mid-prefill
+        self._tick_reserved = 0              # blocks committed this admit round
         self.last_tokens = np.zeros((max_slots,), np.int32)
         self.decode_steps = 0
         self._prefill_cold = jax.jit(
@@ -186,6 +249,17 @@ class ServeEngine:
         return int(jax.random.categorical(
             key, jnp.asarray(logits_row) / req.params.temperature))
 
+    def pool_stats(self) -> dict:
+        """Block-pool / slot-pool memory accounting, including the bytes
+        duplicated for the prefix store (zero when paged: aliased blocks)."""
+        if self.paged:
+            st = self.pool.stats()
+        else:
+            st = {"paged": False, "slots": self.pool.slots,
+                  "max_seq": self.pool.max_seq}
+        st["duplicate_copy_bytes"] = self.duplicate_copy_bytes
+        return st
+
     # ------------------------------------------------------------ submission
     def submit(self, prompt, params: SamplingParams | None = None) -> int:
         """Enqueue one generation request; returns its request id.  The
@@ -218,18 +292,57 @@ class ServeEngine:
         return rid
 
     # ------------------------------------------------------------------ tick
+    def _fits(self, req: Request) -> bool:
+        """Paged admission gate: enough blocks (free + store-evictable) for
+        the request's whole horizon.  Conservative — a prefix hit will need
+        fewer fresh blocks than this — and deadlock-free: aliasing a store
+        entry removes at most as many evictable blocks as it saves.  A True
+        answer commits the blocks: the scheduler admits immediately, but
+        binding happens after the whole admission round, so later fits()
+        calls in the same tick must see the reservation."""
+        need = self.pool.blocks_for(req.prompt_len
+                                    + req.params.max_new_tokens)
+        if self.pool.available() - self._tick_reserved < need:
+            return False
+        self._tick_reserved += need
+        return True
+
+    def _bind_paged(self, req: Request, hit_len: int, entry) -> None:
+        """Build the request's block table: alias the prefix-store blocks
+        (refcount bump, zero copies) and allocate fresh blocks for the rest
+        of the prompt + decode horizon."""
+        need = self.pool.blocks_for(req.prompt_len
+                                    + req.params.max_new_tokens)
+        shared = list(entry) if hit_len else []
+        if shared:
+            self.pool.retain(shared)            # this request's live ref
+        fresh = self.pool.alloc(need - len(shared))
+        if fresh is None:                       # _fits() guarantees capacity
+            raise RuntimeError(
+                f"paged pool exhausted admitting rid={req.rid}: need "
+                f"{need - len(shared)} fresh blocks, "
+                f"{self.pool.available()} available")
+        self.pool.bind_slot(req.slot, shared, fresh)
+        req.progress = hit_len
+
     def step(self) -> dict:
-        """One scheduler tick: admit+prefill into free slots, one fused
-        decode over all active slots, retire finished requests.  Returns
+        """One scheduler tick: admit+prefill into free slots (at most one
+        chunk's worth of prefill tokens across all mid-prefill requests),
+        one fused decode over all fully-prefilled slots, retire finished
+        requests.  Returns
         ``{"admitted","finished","new_tokens","active","queued","working"}``.
         """
-        admitted = self.sched.admit()
+        self._tick_reserved = 0
+        admitted = self.sched.admit(fits=self._fits if self.paged else None)
         new_tokens: list = []
         finished: list = []
         cold_group: list = []
         for req in admitted:
             hit_len, entry = 0, None
-            if self.prefix_cache is not None and req.prompt_len > 1:
+            if self.prefix_cache is not None:
+                # every admission is one lookup — the cache's hit_rate and
+                # the serving tool's per-admission hit_rate share the same
+                # denominator by construction
                 hit_len, entry = self.prefix_cache.lookup(req.prompt)
             req.cached_tokens = hit_len
             req.prefix_kv = entry
@@ -237,14 +350,38 @@ class ServeEngine:
                 "serve.request.admit", rid=req.rid, slot=req.slot,
                 prompt_len=req.prompt_len, cached_tokens=hit_len,
                 queue_s=req.admit_time - req.submit_time)
-            if hit_len == 0 and self.cfg.family in _KV_ONLY:
+            if self.paged:
+                self._bind_paged(req, hit_len, entry)
+                req.prefix_kv = None
+                if hit_len == 0 and self.prefill_chunk is None:
+                    cold_group.append(req)      # grouped dense fast path
+                else:
+                    # hits append their suffix; with chunking on, EVERY
+                    # prefill goes through the budgeted append path so the
+                    # per-tick bound holds fleet-wide
+                    self._prefilling.append(req)
+            elif hit_len == 0 and self.cfg.family in _KV_ONLY:
                 cold_group.append(req)
             else:
                 self._prefill_unit([req], new_tokens, finished)
         if cold_group:
             self._prefill_unit(cold_group, new_tokens, finished)
-        if self.sched.running:
-            self._decode_step(new_tokens, finished)
+        # chunked prefill: one shared FCFS token budget per tick — the total
+        # prefill work between two fused decodes never exceeds one chunk
+        budget = self.prefill_chunk
+        for req in list(self._prefilling):
+            if budget is not None and budget <= 0:
+                break
+            budget_used = self._append_chunk(req, new_tokens, finished,
+                                             budget)
+            if budget is not None:
+                budget -= budget_used
+        self._decode_step(new_tokens, finished)
+        # tick boundary marker: lets per-tick reductions (prefill-stall
+        # accounting in the serving tool) close their window even on ticks
+        # with no decodable slot
+        self.handler.operator_start("serve.tick", active=self.sched.n_active,
+                                    queued=self.sched.n_queued)
         return {
             "admitted": [r.rid for r in admitted],
             "finished": finished,
@@ -254,10 +391,44 @@ class ServeEngine:
             "working": self.sched.has_work,
         }
 
+    # -------------------------------------------------------------- prefill
+    def _publish(self, req: Request) -> None:
+        """Publish the finished prefill's prompt K/V for reuse.  Paged:
+        retain the slot's own blocks under block-aligned store keys (zero
+        bytes moved).  Legacy: one blocking device->host extract per new
+        prompt (counted in ``duplicate_copy_bytes``)."""
+        if self.prefix_cache is None:
+            return
+        if self.paged:
+            self.prefix_cache.insert_blocks(
+                req.prompt, self.pool.tables[req.slot],
+                on_retain=lambda ids: self.pool.retain(ids, store=True))
+            return
+        if self.prefix_cache.covers(req.prompt):
+            return
+        kv = self.pool.extract_kv(req.slot, req.prompt_len)
+        self.duplicate_copy_bytes += kv["k"].nbytes + kv["v"].nbytes
+        self.prefix_cache.insert(req.prompt, kv)
+
+    def _first_token(self, req: Request, logits_row, new_tokens: list,
+                     finished: list) -> None:
+        """Sample the prompt's continuation once prefill completes."""
+        tok = self._sample_one(req, logits_row)
+        req.tokens.append(tok)
+        req.first_token_time = time.perf_counter()
+        self.last_tokens[req.slot] = tok
+        new_tokens.append((req.rid, tok))
+        self._req_handler(req).operator_start(
+            "serve.request.first_token", rid=req.rid,
+            ttft_s=req.first_token_time - req.submit_time)
+        if req.done:
+            self._retire(req, finished)
+
     def _prefill_unit(self, reqs: list, new_tokens: list,
                       finished: list) -> None:
         """Prefill one admission unit: a right-padded cold group (KV-only
-        families) or a single request (prefix hit / SSM / hybrid / MoE)."""
+        families) or a single request (legacy prefix hit / SSM / hybrid /
+        MoE)."""
         hit = len(reqs) == 1 and reqs[0].cached_tokens > 0
         self.handler.operator_start(
             "serve.prefill",
@@ -265,7 +436,8 @@ class ServeEngine:
             slots=tuple(r.slot for r in reqs),
             n_tokens=int(sum(r.prompt_len - r.cached_tokens for r in reqs)),
             cached=int(sum(r.cached_tokens for r in reqs)),
-            group=len(reqs))
+            group=len(reqs), chunked=False)
+        copied_before = self.duplicate_copy_bytes
         if hit:
             req = reqs[0]
             suffix = req.prompt[req.cached_tokens:]
@@ -282,53 +454,110 @@ class ServeEngine:
                 self.params, cache, jnp.asarray(toks),
                 jnp.asarray([n - 1], np.int32))
         else:
-            # ragged group: right-pad to a power-of-two bucket; causality
-            # makes the pad exact for attention (masked KV), so per-row
-            # results match solo prefill.  SSM/hybrid/MoE units are single
-            # requests prefilled at EXACT length — a pad token would update
-            # the carried SSM state (input-dependent dt) / MoE routing.
-            toks, lens = pad_group([r.prompt for r in reqs],
-                                   pow2=self.cfg.family in _KV_ONLY)
+            # ragged group: right-pad to a power-of-two bucket CAPPED at the
+            # pool bound (a non-pow2 max_seq must not compile positions the
+            # pool can never hold); causality makes the pad exact for
+            # attention (masked KV), so per-row results match solo prefill.
+            # SSM/hybrid/MoE units are single requests prefilled at EXACT
+            # length — a pad token would update the carried SSM state
+            # (input-dependent dt) / MoE routing.
+            pow2 = self.cfg.family in _KV_ONLY
+            toks, lens = pad_group([r.prompt for r in reqs], pow2=pow2,
+                                   max_len=self.max_seq if pow2 else None)
             logits, cache = self._prefill_cold(
                 self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
         logits = np.asarray(logits)
         for row, req in enumerate(reqs):
-            self.pool.insert(cache, req.slot, row, req.prompt_len)
-            if self.prefix_cache is not None \
-                    and not self.prefix_cache.covers(req.prompt):
-                # publish prompt KV for reuse; skipped when this exact
-                # prompt is already in the store (the extract is a blocking
-                # device->host copy on the prefill critical path)
-                self.prefix_cache.insert(
-                    req.prompt, self.pool.extract_kv(req.slot,
-                                                     req.prompt_len))
+            if self.paged:
+                self.pool.insert_prefill(cache, req.slot, row)
+            else:
+                self.pool.insert(cache, req.slot, row, req.prompt_len)
+            req.progress = req.prompt_len
+            self._publish(req)
             req.prefix_kv = None
-            tok = self._sample_one(req, logits[row])
-            req.tokens.append(tok)
-            req.first_token_time = time.perf_counter()
-            self.last_tokens[req.slot] = tok
-            new_tokens.append((req.rid, tok))
-            self._req_handler(req).operator_start(
-                "serve.request.first_token", rid=req.rid,
-                ttft_s=req.first_token_time - req.submit_time)
         self.handler.operator_end(
-            "serve.prefill", rids=tuple(r.rid for r in reqs))
-        for req in list(reqs):
-            if req.done:
-                self._retire(req, finished)
+            "serve.prefill", rids=tuple(r.rid for r in reqs),
+            copied_bytes=self.duplicate_copy_bytes - copied_before)
+        for row, req in enumerate(list(reqs)):
+            self._first_token(req, logits[row], new_tokens, finished)
+
+    def _append_chunk(self, req: Request, new_tokens: list, finished: list,
+                      budget: int | None = None) -> int:
+        """Advance one mid-prefill paged request by one chunk (at most
+        ``budget`` tokens): scatter the chunk's K/V through the slot's block
+        table (per-query causal masking keeps multi-token appends exact)
+        and, on the final chunk, sample the first token and publish the
+        prompt's blocks.  Returns the tokens prefilled."""
+        remaining = req.prompt_len - req.progress
+        chunk = remaining if budget is None else min(budget, remaining)
+        span = self.pool.blocks_per_seq * self.pool.block_size
+        s_pad = min(bucket(chunk), span - req.progress)
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :chunk] = req.prompt[req.progress:req.progress + chunk]
+        first_chunk = req.progress == req.cached_tokens
+        self.handler.operator_start(
+            "serve.prefill", rids=(req.rid,), slots=(req.slot,),
+            n_tokens=chunk, cached=req.cached_tokens if first_chunk else 0,
+            group=1, chunked=self.prefill_chunk is not None,
+            base=req.progress)
+        cache = self.pool.cache_view(np.asarray([req.progress], np.int32),
+                                     rows=[req.slot])
+        logits, cache = self._prefill_suffix(
+            self.params, cache, jnp.asarray(toks),
+            jnp.asarray([chunk - 1], np.int32))
+        self.pool.adopt(cache)
+        req.progress += chunk
+        self.handler.operator_end("serve.prefill", rids=(req.rid,),
+                                  copied_bytes=0)
+        if req.prefilled:
+            self._prefilling.remove(req)
+            self._publish(req)
+            self._first_token(req, np.asarray(logits)[0], new_tokens,
+                              finished)
+        return chunk
+
+    # --------------------------------------------------------------- decode
+    def _decode_actives(self) -> dict:
+        """Slots eligible for the fused decode: fully prefilled, first token
+        sampled (mid-prefill rows ride along masked)."""
+        return {slot: req
+                for slot, req in sorted(self.sched.running.items())
+                if req.prefilled and req.tokens}
 
     def _decode_step(self, new_tokens: list, finished: list) -> None:
-        """One fused decode over every active slot (free slots ride along as
-        masked no-ops; their stale bytes never enter any softmax)."""
-        active = dict(sorted(self.sched.running.items()))
+        """One fused decode over every fully-prefilled slot (free and
+        mid-prefill slots ride along as masked no-ops; their stale bytes
+        never enter any softmax and their writes drop)."""
+        active = self._decode_actives()
+        if not active:
+            return
         self.decode_steps += 1
+        pool_attrs = {}
+        if self.paged:
+            st = self.pool.stats()
+            pool_attrs = {"blocks_used": st["blocks_used"],
+                          "n_blocks": st["n_blocks"],
+                          "store_blocks": st["store_blocks"],
+                          "utilization": st["utilization"]}
         self.handler.operator_start(
             "serve.decode", step=self.decode_steps, active=len(active),
             slots=self.pool.slots, queued=self.sched.n_queued,
-            rids=tuple(r.rid for r in active.values()))
-        logits, self.pool.cache = self._decode(
-            self.params, self.pool.cache,
-            jnp.asarray(self.last_tokens[:, None]))
+            rids=tuple(r.rid for r in active.values()), **pool_attrs)
+        if self.paged:
+            span = self.pool.blocks_per_seq * self.pool.block_size
+            # rows without a decodable request park at length == span: their
+            # K/V writes resolve to the sentinel block and drop
+            lengths = np.full((self.pool.slots,), span, np.int32)
+            for slot, req in active.items():
+                lengths[slot] = req.prompt_len + len(req.tokens) - 1
+            cache = self.pool.cache_view(lengths)
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(self.last_tokens[:, None]))
+            self.pool.adopt(cache)
+        else:
+            logits, self.pool.cache = self._decode(
+                self.params, self.pool.cache,
+                jnp.asarray(self.last_tokens[:, None]))
         logits = np.asarray(logits)
         for slot, req in active.items():
             tok = self._sample_one(req, logits[slot])
@@ -341,8 +570,11 @@ class ServeEngine:
             if req.done:
                 self._retire(req, finished)
 
+    # --------------------------------------------------------------- retire
     def _retire(self, req: Request, finished: list) -> None:
         n = len(req.tokens)
+        if self.paged:
+            self.pool.free_slot(req.slot)
         self.sched.release(req)
         self._req_handler(req).operator_start(
             "serve.request.finish", rid=req.rid, n_tokens=n,
@@ -358,20 +590,61 @@ class ServeEngine:
         while len(self._retired) > self.max_retained_requests:
             self.requests.pop(self._retired.popleft(), None)
 
+    def abort(self, rid: int) -> bool:
+        """Cancel a request at any lifecycle stage: drop it from the queue
+        or release its slot (and, paged, its pool blocks), close its child
+        session.  Idempotent; returns False for unknown/already-final
+        requests.  This is the error-path cleanup ``run``/``stream``/
+        ``generate`` invoke when a tick raises mid-drain."""
+        req = self.requests.get(rid)
+        if req is None or req.state in (RequestState.FINISHED,
+                                        RequestState.ABORTED):
+            return False
+        if req.state is RequestState.QUEUED:
+            self.sched.remove_waiting(req)
+        else:                                   # RUNNING: holds a slot
+            if self.paged:
+                self.pool.free_slot(req.slot)
+            if req in self._prefilling:
+                self._prefilling.remove(req)
+            self.sched.release(req, state=RequestState.ABORTED)
+        self._req_handler(req).operator_start(
+            "serve.request.abort", rid=rid, n_tokens=len(req.tokens))
+        if req.session is not None:
+            req.session.close()
+            req.session = None
+        req.prefix_kv = None
+        self._retired.append(rid)
+        while len(self._retired) > self.max_retained_requests:
+            self.requests.pop(self._retired.popleft(), None)
+        return True
+
+    def abort_all(self) -> int:
+        """Abort every queued and running request; returns the count."""
+        live = [r.rid for r in list(self.sched.waiting)
+                + list(self.sched.running.values())]
+        return sum(self.abort(rid) for rid in live)
+
     # ------------------------------------------------------------ high level
     def run(self, requests=()) -> dict:
         """Submit ``requests`` (prompts, or ``(prompt, SamplingParams)``
         pairs) and tick until all queued work drains.  Returns
         ``{rid: np.ndarray tokens}`` for the requests submitted here (or for
-        everything drained, when called with no new requests)."""
+        everything drained, when called with no new requests).  If a tick
+        raises, all live requests are aborted (slots, blocks and sessions
+        released) before the error propagates."""
         rids = [self.submit(*self._split(r)) for r in requests]
         # tokens are snapshotted as requests retire — a drain larger than
         # max_retained_requests must not lose early results to pruning
         drained: dict = {}
-        while self.sched.has_work:
-            for rid in self.step()["finished"]:
-                drained[rid] = np.asarray(self.requests[rid].tokens,
-                                          np.int32)
+        try:
+            while self.sched.has_work:
+                for rid in self.step()["finished"]:
+                    drained[rid] = np.asarray(self.requests[rid].tokens,
+                                              np.int32)
+        except Exception:
+            self.abort_all()
+            raise
         if rids:
             return {rid: drained[rid] for rid in rids}
         return drained
@@ -381,14 +654,19 @@ class ServeEngine:
         order tokens are produced across interleaved scheduler ticks."""
         for r in requests:
             self.submit(*self._split(r))
-        while self.sched.has_work:
-            out = self.step()
-            # a request can land 2 tokens in one tick (prefill + fused
-            # decode); only its LAST token carries the done flag
-            last = {rid: i for i, (rid, _) in enumerate(out["new_tokens"])}
-            done = set(out["finished"])
-            for i, (rid, tok) in enumerate(out["new_tokens"]):
-                yield rid, tok, rid in done and last[rid] == i
+        try:
+            while self.sched.has_work:
+                out = self.step()
+                # a request can land 2 tokens in one tick (prefill + fused
+                # decode); only its LAST token carries the done flag
+                last = {rid: i
+                        for i, (rid, _) in enumerate(out["new_tokens"])}
+                done = set(out["finished"])
+                for i, (rid, tok) in enumerate(out["new_tokens"]):
+                    yield rid, tok, rid in done and last[rid] == i
+        except Exception:
+            self.abort_all()
+            raise
 
     @staticmethod
     def _split(r):
@@ -443,6 +721,9 @@ class ServeEngine:
                 for rid in self.step()["finished"]:
                     done[rid] = np.asarray(self.requests[rid].tokens,
                                            np.int32)
+        except Exception:
+            self.abort_all()
+            raise
         finally:
             self._per_request_sessions = prev
         return np.stack([done[r] for r in rids])

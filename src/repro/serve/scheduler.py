@@ -43,6 +43,7 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
     FINISHED = "finished"
+    ABORTED = "aborted"
 
 
 @dataclasses.dataclass
@@ -57,6 +58,9 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)
     #: prompt tokens skipped at prefill via the prefix cache
     cached_tokens: int = 0
+    #: prompt tokens already materialized in the KV cache (prefix aliases +
+    #: chunks prefilled so far) — the chunked-prefill progress cursor
+    progress: int = 0
     submit_time: float = 0.0
     admit_time: float = 0.0
     first_token_time: float = 0.0
@@ -69,6 +73,11 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def prefilled(self) -> bool:
+        """Whole prompt is in the cache — the request decodes from here."""
+        return self.progress >= self.prompt_len
 
     @property
     def done(self) -> bool:
@@ -110,12 +119,18 @@ class Scheduler:
         req.submit_time = req.submit_time or time.perf_counter()
         self.waiting.append(req)
 
-    def admit(self) -> list:
+    def admit(self, fits=None) -> list:
         """Move waiting requests FCFS into free slots; returns the admitted
-        requests with ``slot``/``state``/``admit_time`` assigned."""
+        requests with ``slot``/``state``/``admit_time`` assigned.  ``fits``
+        (req -> bool) gates admission on resources beyond slots (the paged
+        engine passes a block-availability check); FCFS order is preserved —
+        a head-of-line request that does not fit blocks the queue rather
+        than being overtaken."""
         out = []
         now = time.perf_counter()
         while self.waiting and self._free:
+            if fits is not None and not fits(self.waiting[0]):
+                break
             req = self.waiting.popleft()
             req.slot = self._free.pop()
             req.state = RequestState.RUNNING
@@ -124,7 +139,7 @@ class Scheduler:
             out.append(req)
         return out
 
-    def release(self, req: Request) -> None:
+    def release(self, req: Request, state=RequestState.FINISHED) -> None:
         """Retire: free the request's slot (pool bytes reused in place)."""
         if req.slot is None or self.running.get(req.slot) is not req:
             raise ValueError(f"request {req.rid} does not hold a slot")
@@ -132,21 +147,40 @@ class Scheduler:
         self._free.append(req.slot)
         self._free.sort(reverse=True)           # deterministic ascending pops
         req.slot = None
-        req.state = RequestState.FINISHED
+        req.state = state
         req.finish_time = time.perf_counter()
 
+    def remove_waiting(self, req: Request) -> bool:
+        """Drop a still-queued request (abort path); False if not queued."""
+        try:
+            self.waiting.remove(req)
+        except ValueError:
+            return False
+        req.state = RequestState.ABORTED
+        return True
 
-def pad_group(prompts: list, pow2: bool = True):
+
+def pad_group(prompts: list, pow2: bool = True, max_len: int | None = None):
     """Right-pad ragged prompts to a shared length.
 
     Returns ``(tokens (G, S) int32, lens (G,) int32)`` with ``S`` the
     power-of-two bucket of the longest prompt (``pow2=False``: exact max) —
     bucketing bounds distinct prefill compile shapes to O(log max_seq).
+    ``max_len`` caps the bucket at the KV pool's sequence bound: a non-pow2
+    ``max_seq`` must not compile a wider prefill than the pool can hold
+    (positions past ``max_seq`` would be computed only to be cropped at the
+    slot write) — the same cap the suffix-prefill path applies.
     """
     lens = np.asarray([len(p) for p in prompts], np.int32)
     s = int(lens.max())
     if pow2:
         s = bucket(s)
+    if max_len is not None:
+        if int(lens.max()) > max_len:
+            raise ValueError(
+                f"prompt of length {int(lens.max())} exceeds the pool bound "
+                f"max_len={max_len}")
+        s = min(s, max_len)
     toks = np.zeros((len(prompts), s), np.int32)
     for i, p in enumerate(prompts):
         toks[i, :len(p)] = p

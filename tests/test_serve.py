@@ -28,7 +28,8 @@ import repro.configs as C
 import repro.core as pasta
 from repro.core.events import Event, EventKind
 from repro.models import init_params
-from repro.serve import (PrefixCache, SamplingParams, Scheduler, ServeEngine)
+from repro.serve import (PagedKVPool, PrefixCache, SamplingParams, Scheduler,
+                         ServeEngine)
 from repro.serve.scheduler import Request, RequestState, pad_group
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -358,6 +359,306 @@ def test_stream_done_flag_marks_only_last_token():
     eng = ServeEngine(cfg, params, max_seq=32, max_slots=1)
     events = list(eng.stream([(prompt, SamplingParams(max_new_tokens=2))]))
     assert [fin for _, _, fin in events] == [False, True]
+
+
+# ------------------------------------------------------- paged KV block pool
+def test_paged_chunked_staggered_matches_solo():
+    """The acceptance scenario: 8 staggered ragged requests on 4 slots with
+    chunked prefill == per-request solo runs (unchunked), token-for-token at
+    temperature 0."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    lens = (9, 17, 5, 12, 23, 7, 14, 10)
+    prompts = _ragged_prompts(cfg, lens)
+    sp = SamplingParams(max_new_tokens=5)
+
+    eng = ServeEngine(cfg, params, max_seq=48, max_slots=4, prefix_block=8,
+                      prefill_chunk=8)
+    rids = [eng.submit(p, sp) for p in prompts[:5]]
+    eng.step()
+    rids += [eng.submit(p, sp) for p in prompts[5:]]
+    while eng.sched.has_work:
+        eng.step()
+
+    for rid, prompt in zip(rids, prompts):
+        got = np.asarray(eng.requests[rid].tokens, np.int32)
+        want = _solo(cfg, params, prompt, 5, max_seq=48, max_slots=4)
+        np.testing.assert_array_equal(got, want, err_msg=f"rid={rid}")
+    assert eng.duplicate_copy_bytes == 0
+    assert eng.pool.n_used == eng.pool.stats()["store_blocks"]   # only store
+
+
+def test_prefix_hit_aliases_blocks_without_copy():
+    """A paged prefix hit binds the STORED blocks into the new request's
+    table (refcount >= 2: store + live) and never copies K/V through the
+    host — while still decoding byte-identically to a cold engine."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    p2 = np.concatenate([base, rng.integers(0, cfg.vocab_size, (11,),
+                                            dtype=np.int32)])
+    sp = SamplingParams(max_new_tokens=5)
+
+    warm = ServeEngine(cfg, params, max_seq=64, max_slots=2, prefix_block=8)
+    warm.run([(base, sp)])
+    assert warm.duplicate_copy_bytes == 0
+    assert warm.pool.stats()["store_blocks"] == 4          # 32 tokens / 8
+
+    rid = warm.submit(p2, sp)
+    warm.step()
+    req = warm.requests[rid]
+    assert req.cached_tokens == 32
+    shared = warm.pool.tables[req.slot][:4]
+    # each aliased block: one store ref + this request's live ref
+    for b in shared:
+        assert warm.pool._refs[int(b)] >= 2
+        assert warm.pool._store_refs[int(b)] >= 1
+    while warm.sched.has_work:
+        warm.step()
+    assert warm.duplicate_copy_bytes == 0
+
+    out_cold = _solo(cfg, params, p2, 5, max_seq=64, max_slots=2,
+                     prefix_cache=False)
+    np.testing.assert_array_equal(
+        np.asarray(req.tokens, np.int32), out_cold)
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long cold prompt prefills in chunks across ticks while a
+    co-resident short request keeps decoding — the per-tick prefill work is
+    bounded by the chunk, and both outputs stay byte-identical to solo."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    long_p, short_p = _ragged_prompts(cfg, (64, 8), seed=3)
+    with pasta.Session(tools="serving", name="fleet") as sess:
+        eng = ServeEngine(cfg, params, max_seq=96, max_slots=2,
+                          session=sess, prefix_block=8, prefill_chunk=16)
+        rs = eng.submit(short_p, SamplingParams(max_new_tokens=8))
+        eng.step()               # short admits + prefills alone
+        rl = eng.submit(long_p, SamplingParams(max_new_tokens=4))
+        overlap = 0
+        while eng.sched.has_work:
+            before = len(eng.requests[rs].tokens)
+            eng.step()
+            if not eng.requests[rl].prefilled \
+                    and len(eng.requests[rs].tokens) > before:
+                overlap += 1
+    assert overlap >= 2          # short request decoded DURING the prefill
+    rep = sess.reports()["serving"].data
+    assert rep["prefill"]["chunked_events"] == 5           # 64/16 + the short
+    assert 0 < rep["prefill"]["max_tokens_per_tick"] <= 16
+    assert rep["prefill"]["max_stall_s"] > 0
+    assert rep["pool"]["duplicate_copy_bytes"] == 0
+    assert rep["pool"]["utilization_max"] > 0
+
+    for rid, prompt, n in ((rl, long_p, 4), (rs, short_p, 8)):
+        want = _solo(cfg, params, prompt, n, max_seq=96, max_slots=2)
+        np.testing.assert_array_equal(
+            np.asarray(eng.requests[rid].tokens, np.int32), want)
+
+
+def test_block_exhaustion_queues_head_of_line():
+    """Admission is gated on block availability, not just free slots: a
+    request that does not fit waits (FCFS, no overtaking) and is admitted
+    once retirement frees blocks — with correct output."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (16, 16), seed=4)
+    sp = SamplingParams(max_new_tokens=8)
+    # horizon 24 tokens -> 3 blocks of 8 each; 5 total blocks fit only one
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=2, prefix_block=8,
+                      prefix_cache=False, n_blocks=5)
+    rids = [eng.submit(p, sp) for p in prompts]
+    eng.step()
+    assert eng.sched.n_active == 1 and eng.sched.n_queued == 1
+    assert eng.sched.n_free >= 1                 # a slot is free; blocks not
+    while eng.sched.has_work:
+        eng.step()
+    for rid, prompt in zip(rids, prompts):
+        want = _solo(cfg, params, prompt, 8, max_seq=32, max_slots=2)
+        np.testing.assert_array_equal(
+            np.asarray(eng.requests[rid].tokens, np.int32), want)
+
+
+def test_paged_pool_allocator_refcounts_and_eviction():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    pool = PagedKVPool(cfg, slots=2, max_seq=32, block_size=8)  # 16 blocks
+    ids = pool.alloc(3)
+    assert pool.n_used == 3 and pool.n_free == 13
+    pool.retain(ids[:2], store=True)             # publish two blocks
+    assert pool.n_evictable() == 0               # live ref still held
+    pool.release(ids)                            # live refs dropped
+    assert pool.n_used == 2 and pool.n_evictable() == 2
+    assert pool.available() == 16
+    # allocation under pressure drains the store via evict_cb
+    store = [ids[:2]]
+    pool.evict_cb = lambda: (bool(store)
+                             and (pool.release(store.pop(), store=True)
+                                  or True))
+    big = pool.alloc(15)
+    assert big is not None and store == [] and pool.n_used == 15
+    assert pool.alloc(5) is None                 # truly exhausted
+    # bind/free: a slot owns its alloc refs; free returns blocks and
+    # resets the table row to the sentinel
+    pool.bind_slot(0, [], big[:4])
+    pool.free_slot(0)
+    assert pool.n_used == 11
+    assert (pool.tables[0] == pool.n_blocks).all()
+
+
+def test_legacy_dense_pool_still_copies_and_matches():
+    """paged=False keeps the dense (slots, max_seq) rows + host-copy prefix
+    store: equivalent tokens, but nonzero duplicate_copy_bytes."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    p2 = np.concatenate([base, rng.integers(0, cfg.vocab_size, (11,),
+                                            dtype=np.int32)])
+    sp = SamplingParams(max_new_tokens=5)
+    legacy = ServeEngine(cfg, params, max_seq=64, max_slots=2,
+                         prefix_block=8, paged=False)
+    paged = ServeEngine(cfg, params, max_seq=64, max_slots=2, prefix_block=8)
+    for eng in (legacy, paged):
+        eng.run([(base, sp)])
+    assert legacy.duplicate_copy_bytes > 0 and paged.duplicate_copy_bytes == 0
+    out_l = legacy.run([(p2, sp)])
+    out_p = paged.run([(p2, sp)])
+    np.testing.assert_array_equal(list(out_l.values())[0],
+                                  list(out_p.values())[0])
+    # traffic stats agree (entry counts differ by design: legacy also
+    # publishes a full-length non-aligned key, paged keys stop at the
+    # last block boundary)
+    sl, sp_ = legacy.prefix_cache.stats(), paged.prefix_cache.stats()
+    for k in ("lookups", "hits", "hit_rate", "reused_tokens", "reused_frac"):
+        assert sl[k] == sp_[k], k
+
+
+def test_paged_rejects_stateful_families_and_chunk_requires_paged():
+    cfg = C.reduced(C.get("mamba2-2.7b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="KV-only"):
+        ServeEngine(cfg, params, max_seq=32, max_slots=1, paged=True)
+    dense = C.reduced(C.get("paper-gpt2"))
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(dense, init_params(jax.random.PRNGKey(0), dense),
+                    max_seq=32, max_slots=1, paged=False, prefill_chunk=8)
+
+
+# ------------------------------------------------------------ satellite fixes
+def test_pad_group_caps_bucket_at_max_len():
+    """The pow2 bucket must not outgrow the pool bound (and an oversized
+    prompt is an error, not a silent crop of real tokens)."""
+    toks, lens = pad_group([np.arange(33, dtype=np.int32)], max_len=40)
+    assert toks.shape == (1, 40) and lens.tolist() == [33]   # not bucket=64
+    with pytest.raises(ValueError, match="exceeds the pool bound"):
+        pad_group([np.arange(50, dtype=np.int32)], max_len=40)
+
+
+def test_prefix_cache_covers_is_pure_and_lru_is_recency_ordered():
+    """covers() must not count as traffic or touch recency; lookup() does
+    both; eviction drops the least-recently-USED entry and releases its
+    blocks through on_evict."""
+    evicted, retained = [], []
+    pc = PrefixCache(block=4, capacity=2, on_evict=evicted.append)
+    toks = np.arange(10, dtype=np.int32)
+    pc.insert_blocks(toks, [1, 2, 9, 9], on_retain=retained.append)
+    assert retained == [(1,), (1, 2)]            # keys at L=4 and L=8
+    assert pc.covers(toks, 8) and not pc.covers(toks)      # full 10: no key
+    assert pc.covers(toks, 0)                              # trivially covered
+    assert pc.stats()["lookups"] == 0            # covers() left no trace
+    hit, ent = pc.lookup(toks)                   # touches the L=8 entry
+    assert (hit, ent) == (8, (1, 2))
+    st = pc.stats()
+    assert st["lookups"] == 1 and st["hits"] == 1 and st["hit_rate"] == 1.0
+    # overflow evicts the LRU entry -- the UNtouched L=4 one
+    pc.insert_blocks(np.asarray([7, 7, 7, 7], np.int32), [5, 9],
+                     on_retain=retained.append)
+    assert evicted == [(1,)] and retained[-1] == (5,)
+    assert pc.covers(toks, 8) and not pc.covers(toks, 4)
+
+
+def test_tool_and_cache_hit_rates_agree():
+    """Satellite 3: the serving tool's per-admission hit rate and the
+    PrefixCache's per-lookup hit rate share one denominator (the engine
+    performs exactly one lookup per admission)."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (3, 9, 5, 14, 7, 11, 4, 8),
+                              shared_prefix=24)
+    with pasta.Session(tools="serving", name="fleet") as sess:
+        eng = ServeEngine(cfg, params, max_seq=64, max_slots=4, session=sess,
+                          prefix_block=8)
+        eng.run([(p, SamplingParams(max_new_tokens=4)) for p in prompts])
+    rep = sess.reports()["serving"].data["prefix_cache"]
+    cs = eng.prefix_cache.stats()
+    assert rep["admits"] == cs["lookups"] == 8
+    assert rep["hits"] == cs["hits"] > 0
+    assert rep["hit_rate"] == pytest.approx(cs["hit_rate"])
+    assert rep["reused_tokens"] == cs["reused_tokens"]
+
+
+def test_abort_releases_slot_blocks_and_session():
+    """Satellite 4: abort() at any stage returns the slot and every pool
+    block, closes the child session, and leaves the engine serving."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (8, 8, 8), seed=5)
+    sp = SamplingParams(max_new_tokens=32)
+    eng = ServeEngine(cfg, params, max_seq=48, max_slots=2, prefix_block=8)
+    rids = [eng.submit(p, sp) for p in prompts]
+    eng.step()                                   # 0, 1 running; 2 queued
+    assert eng.abort(rids[2])                    # queued abort
+    assert eng.requests[rids[2]].state is RequestState.ABORTED
+    assert eng.sched.n_queued == 0
+    victim = eng.requests[rids[1]]
+    assert eng.abort(rids[1])                    # running abort
+    assert victim.state is RequestState.ABORTED and victim.slot is None
+    assert victim.session is None
+    assert eng.sched.n_free == 1
+    assert not eng.abort(rids[1])                # idempotent
+    while eng.sched.has_work:
+        eng.step()
+    want = _solo(cfg, params, prompts[0], 32, max_seq=48, max_slots=2)
+    np.testing.assert_array_equal(
+        np.asarray(eng.requests[rids[0]].tokens, np.int32), want)
+    # every block left in the pool is store-held; no live leaks
+    assert eng.pool.n_used == eng.pool.stats()["store_blocks"]
+
+
+def test_mid_drain_failure_aborts_all_and_engine_survives():
+    """Satellite 4: an exception inside a tick (injected sampling failure)
+    must not leak slots, blocks, or open sessions — and the engine must
+    keep serving afterwards."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (8, 12, 6), seed=6)
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=2, prefix_block=8)
+
+    calls = {"n": 0}
+    real = eng._sample_one
+
+    def flaky(req, logits_row):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("injected sampling failure")
+        return real(req, logits_row)
+
+    eng._sample_one = flaky
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.run([(p, SamplingParams(max_new_tokens=4)) for p in prompts])
+    assert not eng.sched.has_work                # everything aborted
+    assert eng.sched.n_free == 2
+    assert all(r.session is None for r in eng.requests.values())
+    assert (eng.pool._refs == eng.pool._store_refs).all()    # no live refs
+
+    eng._sample_one = real                       # fault cleared: still serves
+    (prompt,) = _ragged_prompts(cfg, (9,), seed=7)
+    out = list(eng.run([(prompt, SamplingParams(max_new_tokens=4))])
+               .values())[0]
+    want = _solo(cfg, params, prompt, 4, max_seq=32, max_slots=2)
+    np.testing.assert_array_equal(out, want)
 
 
 # ----------------------------------------------------------------- CLI driver
