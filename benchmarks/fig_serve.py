@@ -20,6 +20,16 @@ controlled trace instead of eyeballing throughput.  Two sections:
   the snapshot shows the longest decode-tick stall staying below one
   whole-prompt prefill.
 
+* **Speculative sweep** — the same shared-prefix trace with long
+  generations (greedy decode settles into repetitive continuations the
+  n-gram proposer exploits) runs at draft depth ``k ∈ {0, 2, 4}``.
+  Asserted: outputs byte-identical across every ``k`` (speculation is a
+  scheduling change, never a sampling change), tokens-per-decode-tick > 1
+  at ``k=4`` (the whole point of multi-token verify), fewer decode
+  dispatches than ``k=0``, and the pool's block accounting balanced after
+  the rollback-heavy run.  Wall-clock tok/s per point is snapshotted; the
+  ``k=4`` speedup is reported rather than asserted (CI machines vary).
+
 Part of ``benchmarks.run --smoke``; payload snapshotted to
 ``BENCH_serve.json`` at the repo root for the per-PR perf trajectory.
 """
@@ -165,9 +175,95 @@ def chunked_prefill(arch: str = "paper-gpt2") -> dict:
     return points
 
 
+SPEC_SWEEP = (0, 2, 4)
+SPEC_MAX_NEW = 256          # long tails: greedy decode goes repetitive and
+SPEC_MAX_SEQ = 320          # prompt-lookup acceptance climbs with position
+SPEC_SLOTS = 4
+
+
+def spec_sweep(arch: str = "paper-gpt2") -> dict:
+    """Draft depth ``k ∈ {0, 2, 4}`` on the shared-prefix trace: byte-
+    identical outputs, >1 committed token per decode tick, balanced pool."""
+    import jax
+
+    import repro.configs as C
+    import repro.core as pasta
+    from repro.models import init_params
+    from repro.serve import SamplingParams, ServeEngine
+
+    cfg = C.reduced(C.get(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _trace(cfg)
+    sp = SamplingParams(max_new_tokens=SPEC_MAX_NEW)
+
+    def one(k):
+        with pasta.Session(tools="serving", name=f"bench/spec{k}") as sess:
+            eng = ServeEngine(cfg, params, max_seq=SPEC_MAX_SEQ,
+                              max_slots=SPEC_SLOTS, session=sess,
+                              prefix_block=PREFIX_BLOCK, spec_decode=k)
+            eng.warmup(sorted({len(p) for p in prompts}))
+            t0 = time.perf_counter()
+            for p in prompts[:5]:
+                eng.submit(p, sp)
+            eng.step()
+            for p in prompts[5:]:
+                eng.submit(p, sp)
+            while eng.sched.has_work:
+                eng.step()
+            wall = time.perf_counter() - t0
+        rep = sess.reports()["serving"].data
+        outs = {rid: list(eng.requests[rid].tokens) for rid in eng.requests}
+        eng.pool.scrub()
+        st = eng.pool.stats()
+        assert (st["blocks_live"] + st["blocks_evictable"]
+                + st["blocks_free"] == st["n_blocks"]), st
+        return wall, rep, outs
+
+    points, outputs = [], {}
+    for k in SPEC_SWEEP:
+        one(k)                              # warm timing run
+        wall, rep, outs = one(k)
+        outputs[k] = outs
+        spec = rep["speculative"]
+        points.append({
+            "spec_k": k,
+            "wall_s": wall,
+            "tok_per_s": rep["generated_tokens"] / wall,
+            "decode_steps": rep["decode_steps"],
+            "tokens_per_tick": spec["tokens_per_tick"],
+            "acceptance_rate": spec["acceptance_rate"],
+            "drafted_tokens": spec["drafted_tokens"],
+            "accepted_tokens": spec["accepted_tokens"],
+            "draft_overhead_s": spec["draft_overhead_s"],
+            "analytic_bytes_per_token":
+                rep["bandwidth"]["analytic_bytes_per_token"],
+        })
+        common.row(f"serve_spec_k{k}",
+                   wall * 1e6 / rep["generated_tokens"],
+                   f"tok/tick={spec['tokens_per_tick']:.2f} "
+                   f"acc={spec['acceptance_rate']:.2f}")
+
+    base, deep = points[0], points[-1]
+    # speculation must never change output — only how it is scheduled
+    for k in SPEC_SWEEP[1:]:
+        assert outputs[k] == outputs[0], \
+            f"spec k={k} output diverged from non-speculative decode"
+    assert deep["tokens_per_tick"] > 1, points
+    assert deep["decode_steps"] < base["decode_steps"], points
+    assert deep["acceptance_rate"] > 0, points
+    # analytic bandwidth: fewer dispatches per committed token must shrink
+    # the modeled params traffic per token
+    assert (deep["analytic_bytes_per_token"]
+            < base["analytic_bytes_per_token"]), points
+    speedup = deep["tok_per_s"] / base["tok_per_s"]
+    return {"max_new_tokens": SPEC_MAX_NEW, "max_slots": SPEC_SLOTS,
+            "sweep": points, "speedup_k4": speedup}
+
+
 def main(**kw) -> dict:
     payload = occupancy_sweep(**kw)
     payload["chunked_prefill"] = chunked_prefill(**kw)
+    payload["spec_sweep"] = spec_sweep(**kw)
     common.save("fig_serve", payload)
     return payload
 

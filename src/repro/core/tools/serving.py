@@ -21,7 +21,15 @@ deployment is judged on:
     exists to bound exactly this quantity,
   * **paged-pool utilization**: block-pool occupancy sampled at every
     decode tick, plus the bytes duplicated for the prefix store (zero on
-    the paged path, where the store aliases pool blocks).
+    the paged path, where the store aliases pool blocks),
+  * **speculative-decode accounting**: draft acceptance rate, committed
+    tokens per fused decode tick (the quantity speculation exists to raise
+    above one-per-slot), and host-side draft overhead seconds,
+  * an **analytic bandwidth estimate**: each decode dispatch streams the
+    params once plus every active row's touched KV blocks, so
+    ``(decode_steps * params_bytes + kv_read_bytes) / committed_tokens``
+    is the modeled bytes per generated token — the decode-roofline
+    denominator acceptance-rate gains are supposed to shrink.
 
 Attached to the engine's parent session it reports the fleet view; attached
 to a request's child session (``request_tools="serving"``) it reports that
@@ -72,6 +80,14 @@ class ServingTool(PastaTool):
         self.pool_util_max = 0.0
         self.pool_store_blocks_max = 0
         self.duplicate_copy_bytes = 0
+        # speculative decode + analytic bandwidth (decode-end attrs)
+        self.spec_k = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.committed_tokens = 0
+        self.draft_s = 0.0
+        self.params_bytes = 0
+        self.kv_read_bytes = 0
         self.timeline: list = []           # (time, phase, active)
         self._t0: float | None = None
 
@@ -99,6 +115,8 @@ class ServingTool(PastaTool):
             e = self._entry(a["rid"])
             e["finish"] = ev.time
             e["n_tokens"] = int(a.get("n_tokens", 0))
+            e["drafted"] = int(a.get("drafted", 0))
+            e["accepted"] = int(a.get("accepted", 0))
         elif name == "serve.decode":
             active = int(a.get("active", 0))
             self.decode_steps += 1
@@ -134,6 +152,17 @@ class ServingTool(PastaTool):
                 self._prefill_start = None
             self.duplicate_copy_bytes += int(
                 ev.attrs.get("copied_bytes", 0))
+        elif ev.name == "serve.decode":
+            a = ev.attrs
+            # non-speculative ticks commit one token per active slot
+            self.committed_tokens += int(a.get("committed",
+                                               a.get("active", 0)))
+            self.spec_k = max(self.spec_k, int(a.get("spec_k", 0)))
+            self.drafted_tokens += int(a.get("drafted", 0))
+            self.accepted_tokens += int(a.get("accepted", 0))
+            self.draft_s += float(a.get("draft_s", 0.0))
+            self.params_bytes = int(a.get("params_bytes", self.params_bytes))
+            self.kv_read_bytes += int(a.get("kv_read_bytes", 0))
 
     def _close_tick(self) -> None:
         """Fold the prefill work accumulated since the last decode dispatch
@@ -158,7 +187,9 @@ class ServingTool(PastaTool):
         for rid, e in sorted(self.req.items()):
             row = {"prompt_len": e.get("prompt_len", 0),
                    "cached_tokens": e.get("cached", 0),
-                   "n_tokens": e.get("n_tokens", 0)}
+                   "n_tokens": e.get("n_tokens", 0),
+                   "drafted": e.get("drafted", 0),
+                   "accepted": e.get("accepted", 0)}
             if "admit" in e:
                 admits += 1
                 hits += e.get("cached", 0) > 0
@@ -204,6 +235,27 @@ class ServingTool(PastaTool):
                      "utilization_max": self.pool_util_max,
                      "store_blocks_max": self.pool_store_blocks_max,
                      "duplicate_copy_bytes": self.duplicate_copy_bytes},
+            "speculative": {
+                "spec_k": self.spec_k,
+                "drafted_tokens": self.drafted_tokens,
+                "accepted_tokens": self.accepted_tokens,
+                "acceptance_rate": (self.accepted_tokens
+                                    / self.drafted_tokens
+                                    if self.drafted_tokens else 0.0),
+                "committed_tokens": self.committed_tokens,
+                "tokens_per_tick": (self.committed_tokens
+                                    / self.decode_steps
+                                    if self.decode_steps else 0.0),
+                "draft_overhead_s": self.draft_s,
+            },
+            "bandwidth": {
+                "params_bytes": self.params_bytes,
+                "kv_read_bytes": self.kv_read_bytes,
+                "analytic_bytes_per_token": (
+                    (self.decode_steps * self.params_bytes
+                     + self.kv_read_bytes) / self.committed_tokens
+                    if self.committed_tokens else 0.0),
+            },
             "prefix_cache": {
                 "admits": admits,
                 "hits": int(hits),

@@ -57,6 +57,20 @@ def _parse():
                     help="per-tick prefill token budget shared across "
                          "mid-prefill requests (bounds decode stalls; "
                          "paged mode only)")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decode: draft K tokens per active "
+                         "slot per tick, verify in one fused forward "
+                         "(0 = off)")
+    ap.add_argument("--draft", default="ngram",
+                    choices=("ngram", "model"),
+                    help="draft source: n-gram prompt-lookup self-draft, "
+                         "or a draft model (--draft-arch)")
+    ap.add_argument("--draft-arch", default=None,
+                    help="arch id for --draft model (reduced to match; "
+                         "default: the target model itself)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip pre-trace jit warmup (TTFT/TPOT will then "
+                         "include compile time)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--pasta-tools", default="serving,kernel_freq")
@@ -128,6 +142,11 @@ def main():
     with pasta.Session(tools=args.pasta_tools, name="serve") as session:
         params = init_params(jax.random.PRNGKey(args.seed), cfg)
         paged = False if args.no_paged else None   # None = family default
+        draft_cfg = None
+        if args.draft_arch is not None:
+            draft_cfg = configs.get(args.draft_arch)
+            if args.reduced:
+                draft_cfg = configs.reduced(draft_cfg)
         engine = ServeEngine(cfg, params, max_seq=max_seq,
                              max_slots=args.max_slots, session=session,
                              request_tools=args.request_tools or None,
@@ -136,7 +155,18 @@ def main():
                              paged=paged, block_size=args.block_size,
                              n_blocks=args.n_blocks,
                              prefill_chunk=args.prefill_chunk,
+                             spec_decode=args.spec_decode, draft=args.draft,
+                             draft_cfg=draft_cfg,
                              rng_seed=args.seed)
+        compile_s = 0.0
+        if not args.no_warmup:
+            # compile the steady-state dispatches BEFORE the trace clock
+            # starts, so TTFT/TPOT percentiles measure serving latency,
+            # not XLA compile time
+            wu = engine.warmup(prompt_lens=[len(p) for p in prompts])
+            compile_s = wu["compile_s"]
+            print(f"[serve] warmup: {len(wu['warmed'])} shapes compiled "
+                  f"in {compile_s:.2f}s (excluded from the trace clock)")
         t0 = time.perf_counter()
         pending = list(zip(arrivals, prompts))
         rids = []
@@ -155,6 +185,13 @@ def main():
         print(f"[serve] {len(rids)} requests, {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / dt:.1f} tok/s), max_slots={args.max_slots}, "
               f"rate={args.rate or 'inf'}")
+        if engine.spec_k:
+            acc = (engine.accepted_tokens / engine.drafted_tokens
+                   if engine.drafted_tokens else 0.0)
+            print(f"[serve] speculative k={engine.spec_k} "
+                  f"({args.draft}): {engine.accepted_tokens}/"
+                  f"{engine.drafted_tokens} drafts accepted "
+                  f"({acc:.2f}), {engine.decode_steps} verify ticks")
         print(f"[serve] sample: {outputs[rids[0]][:12]}")
         try:
             # fleet kernel_freq etc. see the fused decode step's compiled HLO
@@ -165,9 +202,16 @@ def main():
                     np.full((args.max_slots,), span, np.int32))
             else:
                 cache = engine.pool.cache
-            compiled = engine._decode.lower(
-                params, cache,
-                jnp.zeros((args.max_slots, 1), jnp.int32)).compile()
+            if engine.spec_k:
+                compiled = engine._verify.lower(
+                    params, cache,
+                    jnp.zeros((args.max_slots, engine.spec_k + 1),
+                              jnp.int32),
+                    jnp.asarray(engine._verify_idx)).compile()
+            else:
+                compiled = engine._decode.lower(
+                    params, cache,
+                    jnp.zeros((args.max_slots, 1), jnp.int32)).compile()
             session.capture_compiled(compiled, label="serve.decode",
                                      steps=max(engine.decode_steps, 1))
         except Exception as e:                              # noqa: BLE001
@@ -203,11 +247,15 @@ def main():
                 "paged": engine.paged,
                 "block_size": engine.block_size,
                 "prefill_chunk": engine.prefill_chunk,
+                "spec_decode": engine.spec_k,
+                "draft": args.draft if engine.spec_k else None,
+                "warmup": not args.no_warmup,
                 "seed": args.seed,
                 "mesh": args.mesh,
             },
             "summary": {
                 "wall_s": dt,
+                "compile_s": compile_s,
                 "generated_tokens": n_tok,
                 "tok_per_s": n_tok / dt if dt > 0 else 0.0,
                 "ttft_s": serving.get("ttft_s"),
@@ -222,6 +270,8 @@ def main():
                     serving.get("prefill", {}).get("max_tokens_per_tick"),
                 "max_prefill_stall_s":
                     serving.get("prefill", {}).get("max_stall_s"),
+                "speculative": serving.get("speculative"),
+                "bandwidth": serving.get("bandwidth"),
                 "pool": engine.pool_stats(),
             },
             "fleet": {name: rep.data for name, rep in reports.items()},

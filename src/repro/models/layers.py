@@ -307,11 +307,15 @@ def attention(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
             k_cache = cache["k"].at[b_idx, base].set(k[:, 0], mode="drop")
             v_cache = cache["v"].at[b_idx, base].set(v[:, 0], mode="drop")
         else:
-            # multi-token append (chunked/suffix prefill): rows share a base
-            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k,
-                                                          base[0], 1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v,
-                                                          base[0], 1)
+            # multi-token append (chunked/suffix prefill, fused speculative
+            # verify): each row writes at ITS OWN base — the verify batch
+            # interleaves requests at different positions, and single-row
+            # suffix prefill is just the B=1 case.  Out-of-range positions
+            # (parked rows at max_seq, draft spill past the horizon) drop.
+            b_idx = jnp.arange(k.shape[0])[:, None]
+            pos = base[:, None] + jnp.arange(x.shape[1])[None, :]
+            k_cache = cache["k"].at[b_idx, pos].set(k, mode="drop")
+            v_cache = cache["v"].at[b_idx, pos].set(v, mode="drop")
         k_cache = shard(k_cache, "batch", "seq_sp", None, "head_dim")
         v_cache = shard(v_cache, "batch", "seq_sp", None, "head_dim")
         lengths = base + x.shape[1]

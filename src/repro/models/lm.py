@@ -266,9 +266,10 @@ def forward(params: dict, inputs: jax.Array, cfg: ModelConfig,
     """inputs: (B,S) int tokens or (B,S,d) embeddings (frontend stub).
     Returns (logits, new_cache_or_None).  ``return_cache=True`` without an
     input cache collects the prefill KV/SSM caches.  ``logits_mode="index"``
-    runs the lm_head on one per-row position gathered from ``logits_index``
-    (B,) — ragged right-padded serving prefill, where each row's last real
-    token sits at a different offset."""
+    runs the lm_head on per-row positions gathered from ``logits_index`` —
+    (B,) for ragged right-padded serving prefill (each row's last real token
+    sits at a different offset), or (B, P) to read logits at several
+    positions per row (speculative verify reads every draft position)."""
     dt = _dtype(cfg)
     if inputs.ndim == 2 and cfg.frontend == "none":
         h = params["embed"].astype(dt)[inputs]
@@ -297,7 +298,10 @@ def forward(params: dict, inputs: jax.Array, cfg: ModelConfig,
     if logits_mode == "last":
         h = h[:, -1:, :]          # serving: lm_head on the new token only
     elif logits_mode == "index":
-        h = h[jnp.arange(h.shape[0])[:, None], logits_index[:, None]]
+        if logits_index.ndim == 2:
+            h = jnp.take_along_axis(h, logits_index[..., None], axis=1)
+        else:
+            h = h[jnp.arange(h.shape[0])[:, None], logits_index[:, None]]
     if cfg.tie_embeddings and "embed" in params:
         logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(dt))
     elif "lm_head" in params:

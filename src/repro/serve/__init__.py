@@ -10,6 +10,8 @@ slot pool, hash-keyed zero-copy prefix reuse).
 from .engine import ServeEngine
 from .scheduler import Request, RequestState, SamplingParams, Scheduler
 from .cache import KVSlotPool, PagedKVPool, PrefixCache
+from .draft import DraftModelProposer, NgramProposer
 
 __all__ = ["ServeEngine", "Request", "RequestState", "SamplingParams",
-           "Scheduler", "KVSlotPool", "PagedKVPool", "PrefixCache"]
+           "Scheduler", "KVSlotPool", "PagedKVPool", "PrefixCache",
+           "NgramProposer", "DraftModelProposer"]

@@ -110,6 +110,27 @@ def bucket(n: int, floor: int = 8) -> int:
     return b
 
 
+def pad_cache_to(cache: dict, cfg: ModelConfig, max_seq: int) -> dict:
+    """Grow a prefill KV cache's sequence dim to ``max_seq`` slots."""
+    if "kv" not in cache:
+        return cache
+    kv = cache["kv"]
+    cur = kv["k"].shape[2]
+    if cur >= max_seq:
+        return cache
+    pad = max_seq - cur
+
+    def grow(x):
+        widths = [(0, 0)] * x.ndim
+        widths[2] = (0, pad)
+        return jnp.pad(x, widths)
+
+    cache = dict(cache)
+    cache["kv"] = {"k": grow(kv["k"]), "v": grow(kv["v"]),
+                   "length": kv["length"]}
+    return cache
+
+
 class KVSlotPool:
     """Fixed ``(slots, max_seq)`` decode cache pool with per-slot lengths.
 
@@ -214,8 +235,16 @@ class PagedKVPool:
         self.tables = np.full((slots, self.blocks_per_seq), self.n_blocks,
                               np.int32)
         self.evict_cb = None          # () -> bool, frees store blocks
+        #: blocks freed by truncate() whose device bytes are still rejected
+        #: draft KV — dead (every reader masks at its committed length), so
+        #: scrubbing is deferred and batched instead of paid per tick
+        self._dirty: set = set()
         self._insert = jax.jit(_paged_insert, donate_argnums=(0, 1),
                                static_argnames=("crop",))
+        self._zero = jax.jit(
+            lambda pk, pv, ids: (pk.at[:, ids].set(0, mode="drop"),
+                                 pv.at[:, ids].set(0, mode="drop")),
+            donate_argnums=(0, 1))
 
     # -------------------------------------------------------- allocator
     @property
@@ -246,6 +275,10 @@ class PagedKVPool:
             return None
         ids = [self._free.pop() for _ in range(n)]
         self._refs[ids] += 1
+        #: a re-allocated block must never be scrubbed later — its new owner
+        #: overwrites it before reading, and a deferred zero would clobber
+        #: live KV
+        self._dirty.difference_update(ids)
         return ids
 
     def retain(self, ids, store: bool = False) -> None:
@@ -254,7 +287,10 @@ class PagedKVPool:
         if store:
             self._store_refs[ids] += 1
 
-    def release(self, ids, store: bool = False) -> None:
+    def release(self, ids, store: bool = False) -> list:
+        """Drop one reference per block; returns the ids that became fully
+        free (refcount hit zero) so callers can scrub them."""
+        freed = []
         for b in ids:
             b = int(b)
             self._refs[b] -= 1
@@ -262,7 +298,9 @@ class PagedKVPool:
                 self._store_refs[b] -= 1
             if self._refs[b] == 0:
                 self._free.append(b)
+                freed.append(b)
         self._free.sort(reverse=True)          # deterministic ascending pops
+        return freed
 
     # ------------------------------------------------------- slot tables
     def blocks_for(self, n_tokens: int) -> int:
@@ -284,6 +322,69 @@ class PagedKVPool:
         real = row[row < self.n_blocks]
         self.release([int(b) for b in real])
         self.tables[slot] = self.n_blocks
+
+    def ensure(self, slot: int, n_tokens: int) -> int:
+        """Grow the slot's table to cover ``n_tokens`` positions (lazy block
+        binding: decode and speculative spill allocate just-in-time instead
+        of reserving the whole horizon upfront).  Returns the number of
+        blocks allocated; raises if the pool cannot satisfy it — admission's
+        reservation accounting is supposed to make that impossible."""
+        span = self.blocks_per_seq * self.block_size
+        need = self.blocks_for(min(n_tokens, span))
+        row = self.tables[slot]
+        have = int((row < self.n_blocks).sum())
+        if have >= need:
+            return 0
+        fresh = self.alloc(need - have)
+        if fresh is None:
+            raise RuntimeError(
+                f"paged pool exhausted growing slot {slot} to {n_tokens} "
+                f"tokens ({need - have} blocks short) — admission "
+                f"reservation accounting is broken")
+        self.tables[slot, have:have + len(fresh)] = fresh
+        return len(fresh)
+
+    def truncate(self, slot: int, n_tokens: int) -> int:
+        """Roll the slot back to ``n_tokens`` valid positions: drop table
+        blocks past ``blocks_for(n_tokens)`` and release them (store
+        refcounts respected — a block the prefix store still holds is only
+        deref'd, never scrubbed).  Blocks that became fully free still hold
+        rejected-draft KV, but those bytes are dead — no table references
+        them and any future owner overwrites before its mask exposes them —
+        so scrubbing is deferred to :meth:`scrub` and batched.  Returns the
+        number of blocks dropped from the table."""
+        keep = self.blocks_for(n_tokens)
+        row = self.tables[slot]
+        real = row[row < self.n_blocks]
+        if len(real) <= keep:
+            return 0
+        tail = [int(b) for b in real[keep:]]
+        self.tables[slot, keep:] = self.n_blocks
+        self._dirty.update(self.release(tail))
+        if len(self._dirty) >= 32:
+            self.scrub()
+        return len(tail)
+
+    def scrub(self) -> None:
+        """Zero the device bytes of every truncate-freed block still
+        pending (one batched scatter).  Called automatically once enough
+        blocks accumulate; call explicitly for a deterministic pool image
+        (tests, checkpointing an idle engine)."""
+        self._zero_blocks(sorted(self._dirty))
+        self._dirty.clear()
+
+    def _zero_blocks(self, ids: list) -> None:
+        """Scrub freed blocks' device bytes in one donated scatter (ids
+        padded to a pow2 width with the drop sentinel, bounding
+        recompiles)."""
+        if not ids:
+            return
+        width = 1
+        while width < len(ids):
+            width *= 2
+        pad = np.full((width,), self.n_blocks, np.int32)
+        pad[:len(ids)] = ids
+        self.pk, self.pv = self._zero(self.pk, self.pv, jnp.asarray(pad))
 
     # ------------------------------------------------------ device views
     def cache_view(self, lengths: np.ndarray, rows=None) -> dict:
@@ -311,12 +412,17 @@ class PagedKVPool:
             crop=min(span, kv["k"].shape[2]))
 
     def stats(self) -> dict:
+        evictable = self.n_evictable()
         return {
             "paged": True,
             "n_blocks": self.n_blocks,
             "block_size": self.block_size,
             "blocks_used": self.n_used,
             "blocks_free": self.n_free,
+            # disjoint occupancy split: live (a request holds a non-store
+            # reference) + evictable (store-only) + free == n_blocks
+            "blocks_live": self.n_used - evictable,
+            "blocks_evictable": evictable,
             "store_blocks": int((self._store_refs > 0).sum()),
             "utilization": self.n_used / self.n_blocks,
         }

@@ -29,6 +29,20 @@ decode dispatches never exceeds one chunk.  SSM/hybrid (and MoE) families
 keep the exact-length non-paged :class:`~repro.serve.cache.KVSlotPool`
 path — their recurrent state is not block-addressable.
 
+**Speculative decoding** (``spec_decode=k``) reuses that same multi-token
+append path for decode itself: a draft proposer (``draft=`` — n-gram
+prompt-lookup self-draft, a small draft model, or any
+``propose(contexts, k)`` object) guesses ``k`` tokens per active slot,
+one fused verify forward scores all ``k+1`` positions, and the accept
+loop commits the matching prefix (plus the bonus token on full
+acceptance) while rejected suffixes roll back via
+``PagedKVPool.truncate`` — block-table accounting only, the dead KV bytes
+are overwritten before any mask exposes them.  Sampling keys derive from
+``(seed-or-rid, position)`` so output is byte-identical to the
+non-speculative path at ANY temperature; speculation changes speed,
+never tokens.  Dense-attention families only: recurrent SSM/hybrid state
+cannot roll back to an arbitrary position.
+
 PASTA instrumentation is per request *across interleaved steps*: each
 submitted request opens a child :class:`~repro.core.Session` of the engine's
 session at submit time and closes it at retirement, so its lifecycle events
@@ -62,9 +76,14 @@ import numpy as np
 import repro.core as pasta
 from repro.models import forward
 from repro.models.config import ModelConfig
-from .cache import KVSlotPool, PagedKVPool, PrefixCache, bucket
+from .cache import (KVSlotPool, PagedKVPool, PrefixCache, bucket,
+                    pad_cache_to)
+from .draft import DraftModelProposer, NgramProposer
 from .scheduler import (Request, RequestState, SamplingParams, Scheduler,
                         pad_group)
+
+#: kept under the old private name — external callers imported it from here
+_pad_cache_to = pad_cache_to
 
 #: families whose decode state is attention KV only — eligible for padded
 #: group prefill, prefix-cache reuse, and the paged block pool.  SSM/hybrid
@@ -73,27 +92,6 @@ from .scheduler import (Request, RequestState, SamplingParams, Scheduler,
 #: alone at exact length.  vlm/audio would qualify if tokenized, but their
 #: configs are embedding-frontend stubs with no autoregressive token loop.
 _KV_ONLY = ("dense",)
-
-
-def _pad_cache_to(cache: dict, cfg: ModelConfig, max_seq: int) -> dict:
-    """Grow a prefill KV cache's sequence dim to ``max_seq`` slots."""
-    if "kv" not in cache:
-        return cache
-    kv = cache["kv"]
-    cur = kv["k"].shape[2]
-    if cur >= max_seq:
-        return cache
-    pad = max_seq - cur
-
-    def grow(x):
-        widths = [(0, 0)] * x.ndim
-        widths[2] = (0, pad)
-        return jnp.pad(x, widths)
-
-    cache = dict(cache)
-    cache["kv"] = {"k": grow(kv["k"]), "v": grow(kv["v"]),
-                   "length": kv["length"]}
-    return cache
 
 
 class ServeEngine:
@@ -107,7 +105,9 @@ class ServeEngine:
                  prefix_block: int = 16, max_retained_requests: int = 4096,
                  paged: bool | None = None, block_size: int | None = None,
                  n_blocks: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 spec_decode: int = 0, draft="ngram",
+                 draft_cfg: ModelConfig | None = None, draft_params=None):
         """``max_slots``: concurrent requests the KV pool holds; waiting
         requests queue FCFS.  ``session``: parent Session for per-request
         child sessions (innermost active session when omitted).
@@ -123,7 +123,13 @@ class ServeEngine:
         two sequences of prefix-store headroom).  ``prefill_chunk``:
         per-tick prefill token budget, shared FCFS across mid-prefill
         requests (paged mode only; ``None`` = unbounded whole-prompt
-        prefills)."""
+        prefills).  ``spec_decode``: draft ``k`` tokens per active slot per
+        tick and verify all ``k+1`` positions in ONE fused target forward
+        (``0`` = the plain one-token-per-tick path, unchanged).  ``draft``:
+        ``"ngram"`` (prompt-lookup self-draft, no second model),
+        ``"model"`` (greedy rollout from ``draft_cfg``/``draft_params``;
+        defaults to the target itself — every draft accepted), or any
+        object with ``propose(contexts, k)``."""
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "ServeEngine decodes token ids; embedding-frontend archs "
@@ -187,7 +193,10 @@ class ServeEngine:
         #: legacy extract_kv publish path
         self.duplicate_copy_bytes = 0
         self._prefilling: list = []          # paged requests mid-prefill
-        self._tick_reserved = 0              # blocks committed this admit round
+        #: rid -> blocks this live request may still draw from the pool
+        #: (admission reserves the whole horizon incl. speculative spill;
+        #: lazy binding/ensure() draws against it, truncate() pays back)
+        self._owed: dict = {}
         self.last_tokens = np.zeros((max_slots,), np.int32)
         self.decode_steps = 0
         self._prefill_cold = jax.jit(
@@ -197,6 +206,46 @@ class ServeEngine:
             donate_argnums=(1,))
         self._decode = jax.jit(functools.partial(self._decode_impl, cfg),
                                donate_argnums=(1,))
+
+        self.spec_k = int(spec_decode)
+        if self.spec_k < 0:
+            raise ValueError("spec_decode must be >= 0")
+        self.proposer = None
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        #: one full parameter read per decode dispatch — the model-bytes
+        #: term of the analytic per-token bandwidth estimate
+        self.params_bytes = int(sum(x.nbytes for x in jax.tree.leaves(params)))
+        if self.spec_k:
+            if cfg.family not in _KV_ONLY:
+                raise NotImplementedError(
+                    f"speculative decoding is unsupported for the "
+                    f"{cfg.family!r} family: verification rolls back by "
+                    f"truncating KV lengths, but SSM/hybrid recurrent state "
+                    f"cannot un-absorb a rejected suffix")
+            if isinstance(draft, str):
+                if draft == "ngram":
+                    self.proposer = NgramProposer()
+                elif draft == "model":
+                    dcfg = draft_cfg if draft_cfg is not None else cfg
+                    if dcfg.vocab_size != cfg.vocab_size:
+                        raise ValueError(
+                            f"draft vocab {dcfg.vocab_size} != target "
+                            f"vocab {cfg.vocab_size}")
+                    dparams = (draft_params if draft_params is not None
+                               else (params if draft_cfg is None else None))
+                    self.proposer = DraftModelProposer(dcfg, dparams)
+                else:
+                    raise ValueError(f"unknown draft source {draft!r}")
+            else:
+                self.proposer = draft
+            self._verify = jax.jit(functools.partial(self._verify_impl, cfg),
+                                   donate_argnums=(1,))
+            self._verify_idx = np.broadcast_to(
+                np.arange(self.spec_k + 1, dtype=np.int32),
+                (max_slots, self.spec_k + 1)).copy()
+            #: constant per engine; transferred once, not per tick
+            self._verify_idx_dev = jnp.asarray(self._verify_idx)
 
     # ------------------------------------------------------------- jit impls
     @staticmethod
@@ -216,6 +265,16 @@ class ServeEngine:
         logits, cache = forward(params, tokens, cfg, cache=cache,
                                 logits_mode="last")
         return logits[:, -1, :], cache
+
+    @staticmethod
+    def _verify_impl(cfg, params, cache, tokens, idx):
+        # speculative verify: ONE fused forward appends [last, d_1..d_k] per
+        # row through the per-query-causal cache path and reads logits at
+        # every position — logits[:, s] is the target's next-token
+        # distribution given the committed prefix plus drafts d_1..d_s
+        logits, cache = forward(params, tokens, cfg, cache=cache,
+                                logits_mode="index", logits_index=idx)
+        return logits, cache
 
     # -------------------------------------------------------------- plumbing
     @property
@@ -238,14 +297,21 @@ class ServeEngine:
             return req.session.handler
         return self.handler
 
-    def _sample_one(self, req: Request, logits_row: np.ndarray) -> int:
+    def _sample_one(self, req: Request, logits_row: np.ndarray,
+                    position: int | None = None) -> int:
+        """Sample one token.  The temperature>0 key is derived purely from
+        ``(seed-or-(engine seed, rid), position)`` — never from shared key
+        state — so sampled streams are schedule-invariant: byte-identical
+        whatever the admission interleaving, and identical between the
+        speculative (sample-and-match) and sequential paths."""
         if req.params.temperature <= 0:
             return int(np.argmax(logits_row))
+        position = len(req.tokens) if position is None else position
         seed = req.params.seed
         key = jax.random.PRNGKey(self._rng_seed if seed is None else seed)
         if seed is None:
             key = jax.random.fold_in(key, req.rid)
-        key = jax.random.fold_in(key, len(req.tokens))
+        key = jax.random.fold_in(key, position)
         return int(jax.random.categorical(
             key, jnp.asarray(logits_row) / req.params.temperature))
 
@@ -259,6 +325,70 @@ class ServeEngine:
                   "max_seq": self.pool.max_seq}
         st["duplicate_copy_bytes"] = self.duplicate_copy_bytes
         return st
+
+    # --------------------------------------------------------------- warmup
+    def warmup(self, prompt_lens=()) -> dict:
+        """Compile the steady-state dispatches before traffic arrives, so
+        TTFT/TPOT percentiles measure serving latency rather than XLA.
+
+        Warms the fused decode (and, speculative, the fused verify) at their
+        one production shape, plus cold- and suffix-prefill per distinct
+        pow2 bucket of ``prompt_lens``.  All warmup forwards run against
+        fully *parked* rows (paged: every position resolves to the drop
+        sentinel) or rows a later admission overwrites wholesale, so pool
+        state stays exactly as if warmup never ran.  Call on an idle engine;
+        returns ``{"compile_s", "warmed"}``."""
+        assert not self.sched.has_work, "warmup() needs an idle engine"
+        t0 = time.perf_counter()
+        warmed = []
+        slots = self.pool.slots
+        zeros = jnp.zeros((slots, 1), jnp.int32)
+        if self.paged:
+            span = self.pool.blocks_per_seq * self.pool.block_size
+            parked = np.full((slots,), span, np.int32)
+            _, cache = self._decode(self.params, self.pool.cache_view(parked),
+                                    zeros)
+            self.pool.adopt(cache)
+            if self.spec_k:
+                _, cache = self._verify(
+                    self.params, self.pool.cache_view(parked),
+                    jnp.zeros((slots, self.spec_k + 1), jnp.int32),
+                    self._verify_idx_dev)
+                self.pool.adopt(cache)
+        else:
+            # free-slot rows absorb one junk token at their current length;
+            # harmless — admission's insert() rewrites the whole slot row
+            # (KV, recurrent state, length) before the slot is ever read
+            if self.spec_k:
+                kv = self.pool.cache["kv"]
+                parked = jnp.full((slots,), self.pool.max_seq, jnp.int32)
+                cache = dict(self.pool.cache, kv=dict(kv, length=parked))
+                _, self.pool.cache = self._verify(
+                    self.params, cache,
+                    jnp.zeros((slots, self.spec_k + 1), jnp.int32),
+                    self._verify_idx_dev)
+            else:
+                _, self.pool.cache = self._decode(self.params,
+                                                  self.pool.cache, zeros)
+        warmed.append(("decode", slots, self.spec_k + 1))
+        buckets = sorted({min(bucket(int(n)), self.max_seq)
+                          for n in prompt_lens})
+        for length in buckets:
+            one = jnp.zeros((1, length), jnp.int32)
+            idx = jnp.zeros((1,), jnp.int32)
+            self._prefill_cold(self.params, one, idx)
+            warmed.append(("prefill_cold", 1, length))
+            if self.paged:
+                view = self.pool.cache_view(
+                    np.asarray([span], np.int32), rows=[0])
+                _, cache = self._prefill_suffix(self.params, view, one, idx)
+                self.pool.adopt(cache)
+                warmed.append(("prefill_suffix", 1, length))
+            elif self.prefix_cache is not None:
+                seeded = self.pool.seeded_prefill_cache(None)
+                self._prefill_suffix(self.params, seeded, one, idx)
+                warmed.append(("prefill_suffix", 1, length))
+        return {"compile_s": time.perf_counter() - t0, "warmed": warmed}
 
     # ------------------------------------------------------------ submission
     def submit(self, prompt, params: SamplingParams | None = None) -> int:
@@ -292,27 +422,39 @@ class ServeEngine:
         return rid
 
     # ------------------------------------------------------------------ tick
+    def _horizon_blocks(self, req: Request) -> int:
+        """Blocks the request may ever hold at once.  Speculative verify
+        writes can spill up to ``k-1`` positions past the final committed
+        token before rolling back, so admission reserves that headroom too
+        (capped at the table span — the attention scatter drops beyond it)."""
+        horizon = req.prompt_len + req.params.max_new_tokens
+        if self.spec_k:
+            span = self.pool.blocks_per_seq * self.pool.block_size
+            horizon = min(horizon - 1 + self.spec_k, span)
+        return self.pool.blocks_for(horizon)
+
     def _fits(self, req: Request) -> bool:
         """Paged admission gate: enough blocks (free + store-evictable) for
-        the request's whole horizon.  Conservative — a prefix hit will need
+        the request's whole horizon, on top of what already-admitted
+        requests are still owed.  Conservative — a prefix hit will need
         fewer fresh blocks than this — and deadlock-free: aliasing a store
-        entry removes at most as many evictable blocks as it saves.  A True
-        answer commits the blocks: the scheduler admits immediately, but
-        binding happens after the whole admission round, so later fits()
-        calls in the same tick must see the reservation."""
-        need = self.pool.blocks_for(req.prompt_len
-                                    + req.params.max_new_tokens)
-        if self.pool.available() - self._tick_reserved < need:
+        entry removes at most as many evictable blocks as it saves, and
+        every later draw (bind, lazy ensure) decrements the reservation by
+        exactly the blocks taken, so ``available() >= sum(owed)`` is an
+        invariant."""
+        need = self._horizon_blocks(req)
+        if self.pool.available() - sum(self._owed.values()) < need:
             return False
-        self._tick_reserved += need
+        self._owed[req.rid] = need
         return True
 
     def _bind_paged(self, req: Request, hit_len: int, entry) -> None:
-        """Build the request's block table: alias the prefix-store blocks
-        (refcount bump, zero copies) and allocate fresh blocks for the rest
-        of the prompt + decode horizon."""
-        need = self.pool.blocks_for(req.prompt_len
-                                    + req.params.max_new_tokens)
+        """Build the request's block table for the PROMPT only: alias the
+        prefix-store blocks (refcount bump, zero copies) and allocate fresh
+        blocks for the rest of the prompt.  Decode/speculative growth binds
+        lazily (:meth:`PagedKVPool.ensure`) against the admission
+        reservation."""
+        need = self.pool.blocks_for(req.prompt_len)
         shared = list(entry) if hit_len else []
         if shared:
             self.pool.retain(shared)            # this request's live ref
@@ -323,7 +465,15 @@ class ServeEngine:
                 f"{need - len(shared)} fresh blocks, "
                 f"{self.pool.available()} available")
         self.pool.bind_slot(req.slot, shared, fresh)
+        self._owed[req.rid] = max(self._owed.get(req.rid, need) - need, 0)
         req.progress = hit_len
+
+    def _grow_slot(self, req: Request, n_tokens: int) -> None:
+        """Lazy block binding for decode/verify writes up to ``n_tokens``
+        positions, drawing against the request's admission reservation."""
+        grew = self.pool.ensure(req.slot, n_tokens)
+        if grew:
+            self._owed[req.rid] = max(self._owed.get(req.rid, 0) - grew, 0)
 
     def step(self) -> dict:
         """One scheduler tick: admit+prefill into free slots (at most one
@@ -332,7 +482,6 @@ class ServeEngine:
         requests.  Returns
         ``{"admitted","finished","new_tokens","active","queued","working"}``.
         """
-        self._tick_reserved = 0
         admitted = self.sched.admit(fits=self._fits if self.paged else None)
         new_tokens: list = []
         finished: list = []
@@ -376,7 +525,10 @@ class ServeEngine:
                                              budget)
             if budget is not None:
                 budget -= budget_used
-        self._decode_step(new_tokens, finished)
+        if self.spec_k:
+            self._spec_decode_step(new_tokens, finished)
+        else:
+            self._decode_step(new_tokens, finished)
         # tick boundary marker: lets per-tick reductions (prefill-stall
         # accounting in the serving tool) close their window even on ticks
         # with no decodable slot
@@ -524,6 +676,31 @@ class ServeEngine:
                 for slot, req in sorted(self.sched.running.items())
                 if req.prefilled and req.tokens}
 
+    def _kv_read_bytes(self, lens, s: int) -> int:
+        """Analytic KV traffic of one fused decode/verify dispatch: every
+        active row streams its whole live KV window (plus the ``s`` appended
+        positions) once — block-granular in paged mode, since a partially
+        filled block is still a whole block off the device memory bus."""
+        cfg = self.cfg
+        per_pos = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim \
+            * jnp.dtype(cfg.dtype).itemsize
+        total = 0
+        for ln in lens:
+            touched = ln + s
+            if self.paged:
+                touched = self.pool.blocks_for(touched) * self.pool.block_size
+            total += touched * per_pos
+        return total
+
+    def _decode_pool_attrs(self) -> dict:
+        if not self.paged:
+            return {}
+        st = self.pool.stats()
+        return {"blocks_used": st["blocks_used"],
+                "n_blocks": st["n_blocks"],
+                "store_blocks": st["store_blocks"],
+                "utilization": st["utilization"]}
+
     def _decode_step(self, new_tokens: list, finished: list) -> None:
         """One fused decode over every fully-prefilled slot (free and
         mid-prefill slots ride along as masked no-ops; their stale bytes
@@ -532,24 +709,21 @@ class ServeEngine:
         if not active:
             return
         self.decode_steps += 1
-        pool_attrs = {}
-        if self.paged:
-            st = self.pool.stats()
-            pool_attrs = {"blocks_used": st["blocks_used"],
-                          "n_blocks": st["n_blocks"],
-                          "store_blocks": st["store_blocks"],
-                          "utilization": st["utilization"]}
         self.handler.operator_start(
             "serve.decode", step=self.decode_steps, active=len(active),
             slots=self.pool.slots, queued=self.sched.n_queued,
-            rids=tuple(r.rid for r in active.values()), **pool_attrs)
+            rids=tuple(r.rid for r in active.values()),
+            **self._decode_pool_attrs())
+        base = {slot: req.prompt_len + len(req.tokens) - 1
+                for slot, req in active.items()}
         if self.paged:
             span = self.pool.blocks_per_seq * self.pool.block_size
             # rows without a decodable request park at length == span: their
             # K/V writes resolve to the sentinel block and drop
             lengths = np.full((self.pool.slots,), span, np.int32)
             for slot, req in active.items():
-                lengths[slot] = req.prompt_len + len(req.tokens) - 1
+                lengths[slot] = base[slot]
+                self._grow_slot(req, base[slot] + 1)
             cache = self.pool.cache_view(lengths)
             logits, cache = self._decode(
                 self.params, cache, jnp.asarray(self.last_tokens[:, None]))
@@ -564,8 +738,111 @@ class ServeEngine:
             req.tokens.append(tok)
             self.last_tokens[slot] = tok
             new_tokens.append((req.rid, tok))
-        self.handler.operator_end("serve.decode", step=self.decode_steps,
-                                  active=len(active))
+        self.handler.operator_end(
+            "serve.decode", step=self.decode_steps, active=len(active),
+            committed=len(active), params_bytes=self.params_bytes,
+            kv_read_bytes=self._kv_read_bytes(base.values(), 1))
+        for req in list(active.values()):
+            if req.done:
+                self._retire(req, finished)
+
+    def _spec_decode_step(self, new_tokens: list, finished: list) -> None:
+        """Propose → fused verify → accept/rollback, one tick.
+
+        Each active slot's verify row is ``[last_token, d_1..d_k]``
+        (zero-padded past its draft).  The fused target forward appends all
+        ``k+1`` positions through the per-query-causal cache path and
+        returns logits at every one; per slot the accept loop then replays
+        sequential decoding exactly: sample from position ``s`` (same
+        argmax / same position-keyed PRNG draw the plain path would make),
+        commit, and continue only while the sampled token matches draft
+        ``d_{s+1}`` — so output is byte-identical to non-speculative decode
+        and a fully-accepted draft commits ``k+1`` tokens (bonus token) in
+        one dispatch.  Rejected suffix KV stays as dead bytes above the
+        committed length (overwritten by the next append, never read);
+        paged slots also roll their block tables back so draft-spill blocks
+        return to the pool."""
+        active = self._decode_actives()
+        if not active:
+            return
+        k = self.spec_k
+        t_draft = time.perf_counter()
+        drafts = self.proposer.propose(
+            [np.concatenate([req.prompt,
+                             np.asarray(req.tokens, np.int32)])
+             for req in active.values()], k)
+        draft_s = time.perf_counter() - t_draft
+        span = (self.pool.blocks_per_seq * self.pool.block_size
+                if self.paged else self.pool.max_seq)
+        toks = np.zeros((self.pool.slots, k + 1), np.int32)
+        lengths = np.full((self.pool.slots,), span, np.int32)
+        dlen = {}
+        for (slot, req), d in zip(active.items(), drafts):
+            d = np.asarray(d, np.int32)[:k]
+            dlen[slot] = len(d)
+            toks[slot, 0] = self.last_tokens[slot]
+            toks[slot, 1:1 + len(d)] = d
+            lengths[slot] = req.prompt_len + len(req.tokens) - 1
+            if self.paged:
+                self._grow_slot(req, min(int(lengths[slot]) + k + 1, span))
+        self.decode_steps += 1
+        n_drafted = sum(dlen.values())
+        self.handler.operator_start(
+            "serve.decode", step=self.decode_steps, active=len(active),
+            slots=self.pool.slots, queued=self.sched.n_queued,
+            rids=tuple(r.rid for r in active.values()), spec_k=k,
+            drafted=n_drafted, **self._decode_pool_attrs())
+        if self.paged:
+            cache = self.pool.cache_view(lengths)
+            logits, cache = self._verify(self.params, cache,
+                                         jnp.asarray(toks),
+                                         self._verify_idx_dev)
+            self.pool.adopt(cache)
+        else:
+            # the device length leaf is not authoritative in spec mode (a
+            # rollback never rewrites it); rebuild the mask lengths from
+            # committed host state every tick, parking idle rows at max_seq
+            kv = self.pool.cache["kv"]
+            cache = dict(self.pool.cache,
+                         kv=dict(kv, length=jnp.asarray(lengths)))
+            logits, self.pool.cache = self._verify(self.params, cache,
+                                                   jnp.asarray(toks),
+                                                   self._verify_idx_dev)
+        logits = np.asarray(logits)
+        accepted = committed = 0
+        for (slot, req), d in zip(list(active.items()), drafts):
+            len0 = len(req.tokens)
+            s = 0
+            while True:
+                tok = self._sample_one(req, logits[slot, s],
+                                       position=len0 + s)
+                req.tokens.append(tok)
+                new_tokens.append((req.rid, tok))
+                committed += 1
+                if req.done or s >= dlen[slot] or int(toks[slot, s + 1]) != tok:
+                    break
+                accepted += 1
+                s += 1
+            req.drafted += dlen[slot]
+            req.accepted += s
+            self.last_tokens[slot] = req.tokens[-1]
+            if self.paged and not req.done:
+                # rollback: keep blocks through the next write position
+                # (committed prefix + the pending last token), release the
+                # rejected draft spill back to the pool
+                freed = self.pool.truncate(
+                    req.slot, req.prompt_len + len(req.tokens))
+                if freed:
+                    self._owed[req.rid] = self._owed.get(req.rid, 0) + freed
+        self.drafted_tokens += n_drafted
+        self.accepted_tokens += accepted
+        self.handler.operator_end(
+            "serve.decode", step=self.decode_steps, active=len(active),
+            spec_k=k, drafted=n_drafted, accepted=accepted,
+            committed=committed, draft_s=draft_s,
+            params_bytes=self.params_bytes,
+            kv_read_bytes=self._kv_read_bytes(
+                [int(lengths[s]) for s in active], k + 1))
         for req in list(active.values()):
             if req.done:
                 self._retire(req, finished)
@@ -575,11 +852,13 @@ class ServeEngine:
         n = len(req.tokens)
         if self.paged:
             self.pool.free_slot(req.slot)
+        self._owed.pop(req.rid, None)
         self.sched.release(req)
         self._req_handler(req).operator_start(
             "serve.request.finish", rid=req.rid, n_tokens=n,
             ttft_s=req.first_token_time - req.submit_time,
-            total_s=req.finish_time - req.submit_time)
+            total_s=req.finish_time - req.submit_time,
+            drafted=req.drafted, accepted=req.accepted)
         if req.session is not None:
             if self.request_tools:
                 self.request_reports.append(req.session.reports())
@@ -608,6 +887,7 @@ class ServeEngine:
             if req in self._prefilling:
                 self._prefilling.remove(req)
             self.sched.release(req, state=RequestState.ABORTED)
+        self._owed.pop(rid, None)
         self._req_handler(req).operator_start(
             "serve.request.abort", rid=rid, n_tokens=len(req.tokens))
         if req.session is not None:

@@ -61,6 +61,10 @@ class Request:
     #: prompt tokens already materialized in the KV cache (prefix aliases +
     #: chunks prefilled so far) — the chunked-prefill progress cursor
     progress: int = 0
+    #: speculative-decode lifetime counters: draft tokens verified for this
+    #: request / how many of them the target accepted
+    drafted: int = 0
+    accepted: int = 0
     submit_time: float = 0.0
     admit_time: float = 0.0
     first_token_time: float = 0.0

@@ -142,3 +142,87 @@ def test_checkpoint_roundtrip(seed):
     assert step == 42
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- paged KV block pool
+def _paged_pool_invariants(pool, stored):
+    """The allocator's full-state contract, checked after every op."""
+    refs, srefs = pool._refs, pool._store_refs
+    assert (refs >= 0).all() and (srefs >= 0).all()
+    assert (srefs <= refs).all(), "store refs exceed total refs"
+    free = list(pool._free)
+    assert len(set(free)) == len(free), "free-list duplicate"
+    assert set(free) == set(np.flatnonzero(refs == 0)), \
+        "free list out of sync with refcounts"
+    # every reference is accounted for: block-table entries + store holds
+    table_counts = np.zeros(pool.n_blocks, np.int64)
+    for row in pool.tables:
+        for b in row[row < pool.n_blocks]:
+            table_counts[int(b)] += 1
+    assert (refs == table_counts + srefs).all(), \
+        "refcount != table references + store references"
+    # deferred-scrub blocks must all be free (a live block may never be
+    # zeroed out from under its owner)
+    assert pool._dirty <= set(free), "dirty block is live"
+    st = pool.stats()
+    assert (st["blocks_live"] + st["blocks_evictable"]
+            + st["blocks_free"] == st["n_blocks"]), st
+    assert pool.available() == st["blocks_free"] + st["blocks_evictable"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 3),
+                          st.integers(1, 40)),
+                min_size=1, max_size=80))
+def test_paged_pool_invariants_under_random_ops(ops_list):
+    """Random alloc/bind/ensure/truncate/publish/evict/scrub sequences on an
+    undersized pool keep the free-list, refcounts, block tables, prefix-store
+    holds and deferred-scrub set mutually consistent."""
+    import repro.configs as C
+    from repro.serve import PagedKVPool
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    pool = PagedKVPool(cfg, slots=4, max_seq=32, block_size=8, n_blocks=10)
+    span = pool.blocks_per_seq * pool.block_size
+    stored = []          # published prefix-store entries (lists of ids)
+    pool.evict_cb = (lambda: bool(stored)
+                     and (pool.release(stored.pop(0), store=True) or True))
+    bound = [False] * pool.slots
+    for op, slot, n in ops_list:
+        n_tok = max(n % span, 1)
+        if op == 0 and not bound[slot]:
+            ids = pool.alloc(pool.blocks_for(n_tok))
+            if ids is not None:
+                pool.bind_slot(slot, [], ids)
+                bound[slot] = True
+        elif op == 1 and bound[slot]:
+            row = pool.tables[slot]
+            have = int((row < pool.n_blocks).sum())
+            need = pool.blocks_for(n_tok)
+            if need - have <= pool.available():
+                pool.ensure(slot, n_tok)
+        elif op == 2 and bound[slot]:
+            pool.truncate(slot, n_tok)
+        elif op == 3 and bound[slot]:
+            pool.free_slot(slot)
+            bound[slot] = False
+        elif op == 4 and bound[slot]:
+            row = pool.tables[slot]
+            real = [int(b) for b in row[row < pool.n_blocks]]
+            if real:
+                pool.retain(real, store=True)
+                stored.append(real)
+        elif op == 5 and stored:
+            pool.release(stored.pop(0), store=True)
+        elif op == 6:
+            pool.scrub()
+        _paged_pool_invariants(pool, stored)
+    # teardown drains everything: the pool must come back whole
+    for slot in range(pool.slots):
+        if bound[slot]:
+            pool.free_slot(slot)
+    while stored:
+        pool.release(stored.pop(0), store=True)
+    pool.scrub()
+    _paged_pool_invariants(pool, stored)
+    assert pool.n_free == pool.n_blocks and not pool._dirty

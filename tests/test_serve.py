@@ -682,3 +682,212 @@ def test_serve_driver_cli_json(tmp_path):
     assert len(out["requests"]) == 4            # per-request serving reports
     assert set(map(int, out["tokens"]))== {0, 1, 2, 3}
     assert "serving" in out["fleet"] and "kernel_freq" in out["fleet"]
+
+
+# ---------------------------------------------------------- speculative decode
+def _run_staggered(cfg, params, prompts, max_new=16, **kw):
+    """Staggered shared-prefix trace; returns (engine, {rid: tokens})."""
+    sp = SamplingParams(max_new_tokens=max_new,
+                        temperature=kw.pop("temperature", 0.0),
+                        seed=kw.pop("sampling_seed", None))
+    eng = ServeEngine(cfg, params, **kw)
+    out = {}
+    for p in prompts[: len(prompts) // 2]:
+        out[eng.submit(p, sp)] = None
+    eng.step()
+    for p in prompts[len(prompts) // 2:]:
+        out[eng.submit(p, sp)] = None
+    while eng.sched.has_work:
+        for rid in eng.step()["finished"]:
+            out[rid] = list(eng.requests[rid].tokens)
+    return eng, out
+
+
+def test_spec_decode_byte_identical_paged():
+    """k=4 n-gram speculation over the paged pool: staggered ragged
+    admission with prefix hits produces byte-identical tokens to the
+    non-speculative engine AND to solo runs, and the rollback-heavy trace
+    leaves the block pool balanced."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 17, 5, 12, 23, 7), shared_prefix=24)
+    base_eng, base = _run_staggered(cfg, params, prompts,
+                                    max_seq=128, max_slots=4)
+    spec_eng, spec = _run_staggered(cfg, params, prompts,
+                                    max_seq=128, max_slots=4, spec_decode=4)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], spec[rid],
+                                      err_msg=f"rid={rid}")
+    solo = _solo(cfg, params, prompts[0], 16, max_seq=128, max_slots=4,
+                 spec_decode=4)
+    np.testing.assert_array_equal(base[0], solo)
+    assert spec_eng.drafted_tokens > 0
+    assert 0 < spec_eng.accepted_tokens <= spec_eng.drafted_tokens
+    assert spec_eng.decode_steps < base_eng.decode_steps
+    spec_eng.pool.scrub()
+    st = spec_eng.pool.stats()
+    assert (st["blocks_live"] + st["blocks_evictable"]
+            + st["blocks_free"] == st["n_blocks"]), st
+
+
+def test_spec_decode_byte_identical_legacy_dense():
+    """The legacy dense (slots, max_seq) pool supports speculation too:
+    rollback is free (host lengths are authoritative), output unchanged."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 17, 5, 12), shared_prefix=16)
+    _, base = _run_staggered(cfg, params, prompts,
+                             max_seq=64, max_slots=2, paged=False)
+    eng, spec = _run_staggered(cfg, params, prompts, max_seq=64,
+                               max_slots=2, paged=False, spec_decode=3)
+    assert not eng.paged and eng.spec_k == 3
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], spec[rid])
+
+
+def test_spec_decode_with_chunked_prefill():
+    """Chunked prefill (pre-decode multi-token appends) composes with
+    speculative verify on the same per-query-causal cache path."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (40, 9, 26, 7), shared_prefix=8)
+    _, base = _run_staggered(cfg, params, prompts,
+                             max_seq=96, max_slots=3, prefill_chunk=16)
+    eng, spec = _run_staggered(cfg, params, prompts, max_seq=96,
+                               max_slots=3, prefill_chunk=16, spec_decode=4)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], spec[rid])
+
+
+def test_spec_draft_model_self_draft_accepts_nearly_all():
+    """draft="model" defaults to the target itself — the degenerate
+    self-draft must accept (almost) every token (only drafts past a
+    request's stop go unconsumed) and slash decode dispatches."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 17, 5, 12), shared_prefix=16)
+    base_eng, base = _run_staggered(cfg, params, prompts,
+                                    max_seq=64, max_slots=4)
+    eng, out = _run_staggered(cfg, params, prompts, max_seq=64,
+                              max_slots=4, spec_decode=4, draft="model")
+    for rid in base:
+        np.testing.assert_array_equal(base[rid], out[rid])
+    assert eng.accepted_tokens / eng.drafted_tokens > 0.8
+    assert eng.decode_steps <= base_eng.decode_steps // 2
+
+
+def test_spec_decode_rejects_stateful_families_and_bad_draft():
+    params = None
+    for arch in ("mamba2-2.7b", "zamba2-7b"):
+        cfg = C.reduced(C.get(arch))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(NotImplementedError, match="[sS]peculative"):
+            ServeEngine(cfg, params, max_seq=32, max_slots=2, spec_decode=2)
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="draft"):
+        ServeEngine(cfg, params, max_seq=32, max_slots=2, spec_decode=2,
+                    draft="telepathy")
+
+
+def test_sampling_is_schedule_invariant_at_temperature():
+    """temperature>0 keys derive from (seed-or-rid, position) only, so the
+    sampled stream is identical across slot budgets AND across the
+    speculative/sequential split (sample-and-match)."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 17, 5, 12, 23, 7), shared_prefix=16)
+    _, narrow = _run_staggered(cfg, params, prompts, max_new=8,
+                               temperature=0.8, max_seq=96, max_slots=2)
+    _, wide = _run_staggered(cfg, params, prompts, max_new=8,
+                             temperature=0.8, max_seq=96, max_slots=4)
+    assert narrow == wide, "sampling depended on the admission schedule"
+    _, spec = _run_staggered(cfg, params, prompts, max_new=8,
+                             temperature=0.8, max_seq=96, max_slots=4,
+                             spec_decode=3)
+    assert spec == wide, "sampling depended on the speculative schedule"
+
+
+def test_paged_pool_ensure_truncate_accounting():
+    """Lazy grow / rollback bookkeeping at the pool level: ensure() draws
+    blocks just-in-time, truncate() returns the spill, scrub() only zeroes
+    blocks that are still free."""
+    cfg = C.reduced(C.get("paper-gpt2"))
+    pool = PagedKVPool(cfg, slots=2, max_seq=64, block_size=8)
+    ids = pool.alloc(2)
+    pool.bind_slot(0, [], ids)
+    assert pool.ensure(0, 16) == 0               # already covered
+    grew = pool.ensure(0, 35)                    # 5 blocks total
+    assert grew == 3 and pool.n_used == 5
+    freed = pool.truncate(0, 17)                 # back to 3 blocks
+    assert freed == 2 and pool.n_used == 3
+    assert pool.truncate(0, 17) == 0             # idempotent
+    assert pool._dirty and pool._dirty <= set(pool._free)
+    again = pool.alloc(2)                        # reuses the spill...
+    assert not (set(again) & pool._dirty)        # ...and un-dirties it
+    pool.scrub()
+    assert not pool._dirty
+    pool.release(again)
+    pool.free_slot(0)
+    st = pool.stats()
+    assert st["blocks_free"] == st["n_blocks"], st
+    with pytest.raises(RuntimeError, match="exhausted"):
+        big = PagedKVPool(cfg, slots=1, max_seq=64, block_size=8,
+                          n_blocks=2)
+        big.bind_slot(0, [], big.alloc(2))
+        big.ensure(0, 64)
+
+
+def test_ngram_proposer_prompt_lookup():
+    from repro.serve import NgramProposer
+    prop = NgramProposer(max_ngram=3, min_ngram=1)
+    # trailing trigram [5,6,7] recurred at the start; continuation follows
+    (d,) = prop.propose([np.array([5, 6, 7, 8, 9, 5, 6, 7], np.int32)], 2)
+    np.testing.assert_array_equal(d, [8, 9])
+    # prefers the most recent occurrence with a FULL k continuation
+    (d,) = prop.propose([np.array([1, 2, 9, 1, 2, 8, 1, 2], np.int32)], 2)
+    np.testing.assert_array_equal(d, [8, 1])
+    # no recurrence anywhere -> empty draft (verify still commits 1 token)
+    (d,) = prop.propose([np.arange(8, dtype=np.int32)], 2)
+    assert len(d) == 0
+
+
+def test_warmup_compiles_decode_shapes_before_trace():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=2, spec_decode=3)
+    wu = eng.warmup(prompt_lens=[9, 17])
+    assert wu["compile_s"] > 0 and len(wu["warmed"]) >= 2
+    # warmup must not perturb serving: outputs still match the reference
+    (prompt,) = _ragged_prompts(cfg, (9,), seed=3)
+    out = list(eng.run([(prompt, SamplingParams(max_new_tokens=6))])
+               .values())[0]
+    want = _solo(cfg, params, prompt, 6, max_seq=64, max_slots=2)
+    np.testing.assert_array_equal(out, want)
+
+
+def test_serving_tool_speculative_and_bandwidth_sections():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 17, 5, 12), shared_prefix=16)
+    with pasta.Session(tools="serving", name="spec") as sess:
+        _run_staggered(cfg, params, prompts, max_seq=64, max_slots=4,
+                       spec_decode=4, session=sess)
+    rep = sess.reports()["serving"].data
+    spec = rep["speculative"]
+    assert spec["spec_k"] == 4
+    assert spec["drafted_tokens"] > 0
+    assert spec["acceptance_rate"] == (spec["accepted_tokens"]
+                                       / spec["drafted_tokens"])
+    # each request's FIRST token is sampled at prefill, not on a decode
+    # tick, so decode-committed tokens trail generated by one per request
+    assert spec["committed_tokens"] == (rep["generated_tokens"]
+                                        - rep["finished"])
+    assert spec["tokens_per_tick"] > 1
+    bw = rep["bandwidth"]
+    assert bw["params_bytes"] > 0 and bw["kv_read_bytes"] > 0
+    assert bw["analytic_bytes_per_token"] == (
+        rep["decode_steps"] * bw["params_bytes"]
+        + bw["kv_read_bytes"]) / spec["committed_tokens"]
+    for row in rep["by_request"].values():
+        assert row["accepted"] <= row["drafted"]
