@@ -29,7 +29,18 @@ deployment is judged on:
     params once plus every active row's touched KV blocks, so
     ``(decode_steps * params_bytes + kv_read_bytes) / committed_tokens``
     is the modeled bytes per generated token — the decode-roofline
-    denominator acceptance-rate gains are supposed to shrink.
+    denominator acceptance-rate gains are supposed to shrink,
+  * **SLO / multi-tenant accounting**: per-request ``SLOSpec`` tags
+    (tenant, priority, TTFT/TPOT targets) arrive on the submit event; the
+    report adds per-tenant rollups (requests, tokens, TTFT percentiles,
+    attainment), fleet **SLO attainment** (finished requests meeting
+    every stated target), **goodput** (tokens from SLO-meeting requests
+    per wall second — requests with no targets trivially meet), and the
+    **Jain fairness index** over per-tenant generated tokens,
+  * **preemption accounting**: ``serve.request.preempt`` events count
+    evictions and blocks parked into the prefix store; resumed
+    admissions report how many parked blocks aliased back with zero
+    recompute (``recovered_blocks``).
 
 Attached to the engine's parent session it reports the fleet view; attached
 to a request's child session (``request_tools="serving"``) it reports that
@@ -68,6 +79,17 @@ class ServingTool(PastaTool):
         self.prefill_tokens = 0
         self.chunked_events = 0
         self.cached_tokens = 0
+        # admission-EVENT counters: 1:1 with prefix-cache lookups even when
+        # preemption re-admits a request more than once
+        self.admit_events = 0
+        self.hit_events = 0
+        self.admit_prompt_tokens = 0
+        # preemption lifecycle: evictions, blocks parked into the prefix
+        # store, resumed admissions and the blocks they aliased back
+        self.preempt_events = 0
+        self.parked_blocks = 0
+        self.resumed_admits = 0
+        self.recovered_blocks = 0
         # per-tick prefill stall: prefill work inside one scheduler tick
         # (the engine's serve.tick boundary event closes the window)
         self._tick_prefill_tokens = 0
@@ -104,11 +126,31 @@ class ServingTool(PastaTool):
             e = self._entry(a["rid"])
             e["submit"] = ev.time
             e["prompt_len"] = int(a.get("prompt_len", 0))
+            if "tenant" in a:
+                e["tenant"] = a["tenant"]
+                e["priority"] = int(a.get("priority", 0))
+                e["ttft_target"] = a.get("ttft_target_s")
+                e["tpot_target"] = a.get("tpot_target_s")
         elif name == "serve.request.admit":
             e = self._entry(a["rid"])
-            e["admit"] = ev.time
+            # queue_s / TTFT anchor on the FIRST admission; later (resumed)
+            # admissions only update the reuse/recovery counters
+            e.setdefault("admit", ev.time)
             e["cached"] = int(a.get("cached_tokens", 0))
             e["slot"] = a.get("slot")
+            self.admit_events += 1
+            self.hit_events += int(a.get("cached_tokens", 0)) > 0
+            self.admit_prompt_tokens += int(a.get("prompt_len", 0))
+            if a.get("resumed"):
+                self.resumed_admits += 1
+                rec = int(a.get("recovered_blocks", 0))
+                self.recovered_blocks += rec
+                e["recovered_blocks"] = e.get("recovered_blocks", 0) + rec
+        elif name == "serve.request.preempt":
+            e = self._entry(a["rid"])
+            e["preempts"] = e.get("preempts", 0) + 1
+            self.preempt_events += 1
+            self.parked_blocks += int(a.get("parked_blocks", 0))
         elif name == "serve.request.first_token":
             self._entry(a["rid"])["first"] = ev.time
         elif name == "serve.request.finish":
@@ -180,36 +222,82 @@ class ServingTool(PastaTool):
         ttft, tpot, queue, per_request = [], [], [], {}
         finished = 0
         generated = 0
-        admits = 0
-        hits = 0
-        prompt_tokens = 0
+        good_tokens = 0
+        slo_met_n = 0
+        tenants: dict = {}
         t_last = self._t0 or 0.0
         for rid, e in sorted(self.req.items()):
+            tenant = e.get("tenant", "default")
             row = {"prompt_len": e.get("prompt_len", 0),
                    "cached_tokens": e.get("cached", 0),
                    "n_tokens": e.get("n_tokens", 0),
                    "drafted": e.get("drafted", 0),
-                   "accepted": e.get("accepted", 0)}
-            if "admit" in e:
-                admits += 1
-                hits += e.get("cached", 0) > 0
-                prompt_tokens += e.get("prompt_len", 0)
-                if "submit" in e:
-                    row["queue_s"] = e["admit"] - e["submit"]
-                    queue.append(row["queue_s"])
+                   "accepted": e.get("accepted", 0),
+                   "tenant": tenant,
+                   "preempts": e.get("preempts", 0)}
+            tn = tenants.setdefault(tenant, {
+                "requests": 0, "finished": 0, "generated_tokens": 0,
+                "good_tokens": 0, "slo_met": 0, "preempts": 0,
+                "_ttft": [], "_queue": []})
+            tn["requests"] += 1
+            tn["preempts"] += row["preempts"]
+            if "admit" in e and "submit" in e:
+                row["queue_s"] = e["admit"] - e["submit"]
+                queue.append(row["queue_s"])
+                tn["_queue"].append(row["queue_s"])
             if "first" in e and "submit" in e:
                 row["ttft_s"] = e["first"] - e["submit"]
                 ttft.append(row["ttft_s"])
+                tn["_ttft"].append(row["ttft_s"])
             if "finish" in e:
                 finished += 1
+                tn["finished"] += 1
                 generated += e.get("n_tokens", 0)
+                tn["generated_tokens"] += e.get("n_tokens", 0)
                 t_last = max(t_last, e["finish"])
                 if "first" in e and e.get("n_tokens", 0) > 1:
                     row["tpot_s"] = (e["finish"] - e["first"]) \
                         / (e["n_tokens"] - 1)
                     tpot.append(row["tpot_s"])
+                # a finished request meets its SLO iff every STATED target
+                # holds; untagged/targetless requests trivially meet, so
+                # goodput degenerates to throughput without SLOs
+                met = True
+                tt = e.get("ttft_target")
+                if tt is not None and row.get("ttft_s", 0.0) > tt:
+                    met = False
+                pt = e.get("tpot_target")
+                if pt is not None and row.get("tpot_s", 0.0) > pt:
+                    met = False
+                row["slo_met"] = met
+                if met:
+                    slo_met_n += 1
+                    tn["slo_met"] += 1
+                    good_tokens += e.get("n_tokens", 0)
+                    tn["good_tokens"] += e.get("n_tokens", 0)
             per_request[rid] = row
         span = max(t_last - (self._t0 or 0.0), 0.0)
+        by_tenant = {}
+        for name, tn in sorted(tenants.items()):
+            by_tenant[name] = {
+                "requests": tn["requests"],
+                "finished": tn["finished"],
+                "generated_tokens": tn["generated_tokens"],
+                "ttft_s": _pctl(tn["_ttft"]),
+                "queue_s": _pctl(tn["_queue"]),
+                "slo_attainment": (tn["slo_met"] / tn["finished"]
+                                   if tn["finished"] else None),
+                "goodput_tok_per_s": (tn["good_tokens"] / span
+                                      if span > 0 else 0.0),
+                "preemptions": tn["preempts"],
+            }
+        # Jain's index over per-tenant generated tokens: 1.0 = perfectly
+        # even service, 1/n = one tenant got everything
+        shares = [tn["generated_tokens"] for tn in tenants.values()
+                  if tn["finished"]]
+        jain = ((sum(shares) ** 2 / (len(shares) * sum(x * x
+                                                       for x in shares)))
+                if shares and any(shares) else None)
         return {
             "requests": len(self.req),
             "finished": finished,
@@ -257,13 +345,29 @@ class ServingTool(PastaTool):
                     if self.committed_tokens else 0.0),
             },
             "prefix_cache": {
-                "admits": admits,
-                "hits": int(hits),
-                "hit_rate": hits / admits if admits else 0.0,
+                "admits": self.admit_events,
+                "hits": self.hit_events,
+                "hit_rate": (self.hit_events / self.admit_events
+                             if self.admit_events else 0.0),
                 "reused_tokens": self.cached_tokens,
-                "reused_frac": (self.cached_tokens / prompt_tokens
-                                if prompt_tokens else 0.0),
+                "reused_frac": (self.cached_tokens
+                                / self.admit_prompt_tokens
+                                if self.admit_prompt_tokens else 0.0),
             },
+            "slo": {
+                "attainment": (slo_met_n / finished if finished else None),
+                "good_tokens": good_tokens,
+                "goodput_tok_per_s": (good_tokens / span
+                                      if span > 0 else 0.0),
+                "jain_fairness": jain,
+            },
+            "preemption": {
+                "count": self.preempt_events,
+                "parked_blocks": self.parked_blocks,
+                "resumed": self.resumed_admits,
+                "recovered_blocks": self.recovered_blocks,
+            },
+            "tenants": by_tenant,
             "by_request": per_request,
             "series": self.timeline,
         }

@@ -10,9 +10,17 @@ percentiles, batch-occupancy timeline, prefix-cache hit rate) plus whatever
 ``--pasta-tools`` names, and each request's child session carries
 ``--request-tools``.
 
+Multi-tenant traffic: ``--traffic <preset>`` swaps the uniform Poisson
+trace for a ``repro.serve.traffic`` preset (mixed lengths, bursty
+arrivals, per-tenant SLO tags), ``--policy`` picks the scheduling policy
+(fcfs/priority/edf/fair), and traces are reproducible artifacts —
+``--save-trace out.jsonl`` writes the materialized trace,
+``--trace-file in.jsonl`` replays one exactly (so two policies can be
+compared on the *same* arrivals).
+
 ``--json <path>`` writes the structured results (per-request + fleet
-reports, token throughput, latency percentiles) in the same
-one-dict-per-run contract as the dryrun driver.
+reports, token throughput, latency/SLO/goodput summaries, trace seed and
+policy name) in the same one-dict-per-run contract as the dryrun driver.
 """
 
 import argparse
@@ -68,6 +76,27 @@ def _parse():
     ap.add_argument("--draft-arch", default=None,
                     help="arch id for --draft model (reduced to match; "
                          "default: the target model itself)")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=("fcfs", "priority", "edf", "fair"),
+                    help="scheduling policy: fcfs (default), priority / "
+                         "edf (preemptive: evict-and-requeue via the "
+                         "prefix store), fair (least-served tenant first)")
+    ap.add_argument("--interleave", default="chunked",
+                    choices=("chunked", "decode"),
+                    help="prefill/decode arbitration per tick: spend the "
+                         "chunk budget every tick, or defer prefill while "
+                         "any slot can decode (needs --prefill-chunk)")
+    ap.add_argument("--traffic", default=None,
+                    choices=("two-tenant-bursty",),
+                    help="multi-tenant traffic preset from "
+                         "repro.serve.traffic (overrides the uniform "
+                         "Poisson trace flags)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="replay a JSONL trace (from --save-trace) "
+                         "instead of generating one")
+    ap.add_argument("--save-trace", default=None, metavar="PATH",
+                    help="write the materialized trace as JSONL for "
+                         "exact replay")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip pre-trace jit warmup (TTFT/TPOT will then "
                          "include compile time)")
@@ -125,7 +154,7 @@ def main():
     import repro.core as pasta
     from repro.dist.sharding import set_mesh
     from repro.models import init_params
-    from repro.serve import SamplingParams, ServeEngine
+    from repro.serve import SamplingParams, ServeEngine, traffic
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -134,10 +163,29 @@ def main():
     mesh = jax.make_mesh((d, m), ("data", "model")) if d * m > 1 else None
     set_mesh(mesh)
 
-    max_seq = args.shared_prefix + args.prompt_len + args.max_new_tokens
-    prompts, arrivals = make_trace(args, max(cfg.vocab_size, 2))
-    params_s = SamplingParams(max_new_tokens=args.max_new_tokens,
-                              temperature=args.temperature)
+    vocab = max(cfg.vocab_size, 2)
+    trace_meta = {"seed": args.seed}
+    if args.trace_file:
+        trace, trace_meta = traffic.load_trace(args.trace_file)
+        print(f"[serve] replaying {len(trace)} requests from "
+              f"{args.trace_file} (meta={trace_meta})")
+    elif args.traffic:
+        trace = traffic.PRESETS[args.traffic](vocab, seed=args.seed)
+    else:
+        prompts, arrivals = make_trace(args, vocab)
+        trace = [traffic.TraceRequest(arrival_s=float(a), prompt=p,
+                                      max_new_tokens=args.max_new_tokens,
+                                      slo=None)
+                 for a, p in zip(arrivals, prompts)]
+    if args.save_trace:
+        traffic.save_trace(args.save_trace, trace, seed=args.seed,
+                           meta={"preset": args.traffic,
+                                 "arch": args.arch})
+        print(f"[serve] wrote trace {args.save_trace}")
+    if args.traffic or args.trace_file:
+        max_seq = traffic.max_seq_for(trace)
+    else:
+        max_seq = args.shared_prefix + args.prompt_len + args.max_new_tokens
 
     with pasta.Session(tools=args.pasta_tools, name="serve") as session:
         params = init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -157,24 +205,31 @@ def main():
                              prefill_chunk=args.prefill_chunk,
                              spec_decode=args.spec_decode, draft=args.draft,
                              draft_cfg=draft_cfg,
+                             policy=args.policy,
+                             interleave=args.interleave,
                              rng_seed=args.seed)
         compile_s = 0.0
         if not args.no_warmup:
             # compile the steady-state dispatches BEFORE the trace clock
             # starts, so TTFT/TPOT percentiles measure serving latency,
             # not XLA compile time
-            wu = engine.warmup(prompt_lens=[len(p) for p in prompts])
+            wu = engine.warmup(prompt_lens=[len(t.prompt) for t in trace])
             compile_s = wu["compile_s"]
             print(f"[serve] warmup: {len(wu['warmed'])} shapes compiled "
                   f"in {compile_s:.2f}s (excluded from the trace clock)")
         t0 = time.perf_counter()
-        pending = list(zip(arrivals, prompts))
+        pending = [(t.arrival_s, t) for t in trace]
         rids = []
         outputs = {}            # collected at retirement (pruning-safe)
         while pending or engine.sched.has_work:
             now = time.perf_counter() - t0
             while pending and pending[0][0] <= now:
-                rids.append(engine.submit(pending.pop(0)[1], params_s))
+                t = pending.pop(0)[1]
+                rids.append(engine.submit(
+                    t.prompt,
+                    SamplingParams(max_new_tokens=t.max_new_tokens,
+                                   temperature=args.temperature),
+                    slo=t.slo))
             if engine.sched.has_work:
                 for rid in engine.step()["finished"]:
                     outputs[rid] = list(engine.requests[rid].tokens)
@@ -184,7 +239,12 @@ def main():
         n_tok = sum(len(t) for t in outputs.values())
         print(f"[serve] {len(rids)} requests, {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / dt:.1f} tok/s), max_slots={args.max_slots}, "
-              f"rate={args.rate or 'inf'}")
+              f"policy={args.policy}, rate={args.rate or 'inf'}")
+        if engine.preemptions:
+            print(f"[serve] preemptions={engine.preemptions} "
+                  f"parked_blocks={engine.parked_blocks} "
+                  f"recovered_blocks={engine.recovered_blocks} "
+                  f"(zero-recompute resume)")
         if engine.spec_k:
             acc = (engine.accepted_tokens / engine.drafted_tokens
                    if engine.drafted_tokens else 0.0)
@@ -252,6 +312,11 @@ def main():
                 "warmup": not args.no_warmup,
                 "seed": args.seed,
                 "mesh": args.mesh,
+                "policy": args.policy,
+                "interleave": args.interleave,
+                "traffic": args.traffic,
+                "trace_file": args.trace_file,
+                "trace_seed": trace_meta.get("seed", args.seed),
             },
             "summary": {
                 "wall_s": dt,
@@ -273,6 +338,9 @@ def main():
                 "speculative": serving.get("speculative"),
                 "bandwidth": serving.get("bandwidth"),
                 "pool": engine.pool_stats(),
+                "slo": serving.get("slo"),
+                "preemption": serving.get("preemption"),
+                "tenants": serving.get("tenants"),
             },
             "fleet": {name: rep.data for name, rep in reports.items()},
             "requests": per_request,

@@ -29,6 +29,23 @@ decode dispatches never exceeds one chunk.  SSM/hybrid (and MoE) families
 keep the exact-length non-paged :class:`~repro.serve.cache.KVSlotPool`
 path — their recurrent state is not block-addressable.
 
+**Scheduling is policy-pluggable** (``policy=``): an
+:class:`~repro.serve.slo.SLOPolicy` stable-sorts the waiting queue each
+tick (FCFS default — byte-identical to the policy-free scheduler) and,
+for preemptive policies (priority/EDF), names running victims when
+higher-urgency work waits with no free slot.  Preemption is
+**evict-and-requeue without losing work**: the victim's committed KV
+blocks are parked in the :class:`~repro.serve.cache.PrefixCache` through
+the same ``insert_blocks``/refcount path a finished prefill uses (zero
+bytes copied), the slot frees, and the request rejoins the queue front;
+re-admission looks up its *context* (prompt + committed tokens), aliases
+the parked blocks straight back, and the position-keyed sampler resumes
+at exactly the next position — so a preempted request's output is
+byte-identical to its unpreempted run, at any temperature.  The
+``interleave=`` knob arbitrates prefill vs decode per tick:
+``"chunked"`` spends the prefill budget every tick, ``"decode"`` defers
+chunk work while any slot can decode.
+
 **Speculative decoding** (``spec_decode=k``) reuses that same multi-token
 append path for decode itself: a draft proposer (``draft=`` — n-gram
 prompt-lookup self-draft, a small draft model, or any
@@ -81,6 +98,7 @@ from .cache import (KVSlotPool, PagedKVPool, PrefixCache, bucket,
 from .draft import DraftModelProposer, NgramProposer
 from .scheduler import (Request, RequestState, SamplingParams, Scheduler,
                         pad_group)
+from .slo import get_policy
 
 #: kept under the old private name — external callers imported it from here
 _pad_cache_to = pad_cache_to
@@ -107,7 +125,8 @@ class ServeEngine:
                  n_blocks: int | None = None,
                  prefill_chunk: int | None = None,
                  spec_decode: int = 0, draft="ngram",
-                 draft_cfg: ModelConfig | None = None, draft_params=None):
+                 draft_cfg: ModelConfig | None = None, draft_params=None,
+                 policy=None, interleave: str = "chunked"):
         """``max_slots``: concurrent requests the KV pool holds; waiting
         requests queue FCFS.  ``session``: parent Session for per-request
         child sessions (innermost active session when omitted).
@@ -129,7 +148,16 @@ class ServeEngine:
         ``"ngram"`` (prompt-lookup self-draft, no second model),
         ``"model"`` (greedy rollout from ``draft_cfg``/``draft_params``;
         defaults to the target itself — every draft accepted), or any
-        object with ``propose(contexts, k)``."""
+        object with ``propose(contexts, k)``.  ``policy``: scheduling
+        policy name (``fcfs``/``priority``/``edf``/``fair``) or
+        :class:`~repro.serve.slo.SLOPolicy` instance — orders the waiting
+        queue and, preemptive policies, names running victims to
+        evict-and-requeue (paged mode only; ``None``/``fcfs`` is
+        byte-identical to the policy-free scheduler).  ``interleave``:
+        prefill/decode arbitration per tick — ``"chunked"`` (default)
+        spends the FCFS ``prefill_chunk`` budget every tick;
+        ``"decode"`` defers ALL mid-prefill chunk work on ticks where any
+        slot can decode (decode-priority; requires ``prefill_chunk``)."""
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "ServeEngine decodes token ids; embedding-frontend archs "
@@ -154,7 +182,8 @@ class ServeEngine:
         # worth of retirements readable for run()/stream() collection)
         self.max_retained_requests = max(max_retained_requests, max_slots)
         self._retired: collections.deque = collections.deque()
-        self.sched = Scheduler(max_slots)
+        self.policy = get_policy(policy)
+        self.sched = Scheduler(max_slots, policy=self.policy)
 
         self.paged = (cfg.family in _KV_ONLY) if paged is None else paged
         if self.paged and cfg.family not in _KV_ONLY:
@@ -180,6 +209,29 @@ class ServeEngine:
             # with block boundaries (tidy tables, O(log) tail shapes)
             self.prefill_chunk = -(-prefill_chunk // self.block_size) \
                 * self.block_size
+        if self.policy is not None and self.policy.preemptive \
+                and not self.paged:
+            raise ValueError(
+                f"policy {self.policy!r} preempts via the prefix store, "
+                f"which needs the paged KV pool; use a non-preemptive "
+                f"policy (e.g. PriorityPolicy(preempt=False)) or paged "
+                f"mode")
+        if interleave not in ("chunked", "decode"):
+            raise ValueError(
+                f"interleave must be 'chunked' or 'decode', not "
+                f"{interleave!r}")
+        if interleave == "decode" and self.prefill_chunk is None:
+            raise ValueError(
+                "interleave='decode' arbitrates the chunked-prefill "
+                "budget; set prefill_chunk=")
+        self.interleave = interleave
+        #: preemption lifetime counters: evictions, blocks parked into the
+        #: prefix store at eviction, and tokens/blocks aliased back (zero
+        #: recompute) at resumed admissions
+        self.preemptions = 0
+        self.parked_blocks = 0
+        self.recovered_tokens = 0
+        self.recovered_blocks = 0
         self.prefix_cache = None
         if prefix_cache and cfg.family in _KV_ONLY:
             on_evict = ((lambda ent: self.pool.release(ent, store=True))
@@ -391,10 +443,14 @@ class ServeEngine:
         return {"compile_s": time.perf_counter() - t0, "warmed": warmed}
 
     # ------------------------------------------------------------ submission
-    def submit(self, prompt, params: SamplingParams | None = None) -> int:
+    def submit(self, prompt, params: SamplingParams | None = None,
+               slo=None) -> int:
         """Enqueue one generation request; returns its request id.  The
         request's child Session opens here and spans queueing, prefill, and
-        every fused decode step until retirement."""
+        every fused decode step until retirement.  ``slo``: optional
+        :class:`~repro.serve.slo.SLOSpec` — tenant/priority tags feed the
+        scheduling policy, TTFT/TPOT targets feed the serving tool's
+        goodput/attainment accounting."""
         params = params or SamplingParams()
         prompt = np.asarray(prompt, dtype=np.int32)
         if prompt.ndim != 1 or prompt.shape[0] == 0:
@@ -407,7 +463,7 @@ class ServeEngine:
                 f"prompt ({prompt.shape[0]}) + max_new_tokens "
                 f"({params.max_new_tokens}) exceeds max_seq={self.max_seq}")
         rid = next(self._req_ids)
-        req = Request(rid=rid, prompt=prompt, params=params,
+        req = Request(rid=rid, prompt=prompt, params=params, slo=slo,
                       submit_time=time.perf_counter())
         if self._per_request_sessions and self._handler is None:
             parent = self.session or pasta.current_session()
@@ -416,9 +472,14 @@ class ServeEngine:
                 name=f"{parent.name}/request{rid}")
         self.requests[rid] = req
         self.sched.submit(req)
+        attrs = {}
+        if slo is not None:
+            attrs = {"tenant": slo.tenant, "priority": slo.priority,
+                     "ttft_target_s": slo.ttft_target_s,
+                     "tpot_target_s": slo.tpot_target_s}
         self._req_handler(req).operator_start(
             "serve.request.submit", rid=rid, prompt_len=req.prompt_len,
-            max_new_tokens=params.max_new_tokens)
+            max_new_tokens=params.max_new_tokens, **attrs)
         return rid
 
     # ------------------------------------------------------------------ tick
@@ -449,12 +510,13 @@ class ServeEngine:
         return True
 
     def _bind_paged(self, req: Request, hit_len: int, entry) -> None:
-        """Build the request's block table for the PROMPT only: alias the
-        prefix-store blocks (refcount bump, zero copies) and allocate fresh
-        blocks for the rest of the prompt.  Decode/speculative growth binds
-        lazily (:meth:`PagedKVPool.ensure`) against the admission
+        """Build the request's block table for the admission CONTEXT only
+        (the prompt — plus the committed tokens, on a resumed admission):
+        alias the prefix-store blocks (refcount bump, zero copies) and
+        allocate fresh blocks for the rest.  Decode/speculative growth
+        binds lazily (:meth:`PagedKVPool.ensure`) against the admission
         reservation."""
-        need = self.pool.blocks_for(req.prompt_len)
+        need = self.pool.blocks_for(req.prefill_len)
         shared = list(entry) if hit_len else []
         if shared:
             self.pool.retain(shared)            # this request's live ref
@@ -476,29 +538,49 @@ class ServeEngine:
             self._owed[req.rid] = max(self._owed.get(req.rid, 0) - grew, 0)
 
     def step(self) -> dict:
-        """One scheduler tick: admit+prefill into free slots (at most one
-        chunk's worth of prefill tokens across all mid-prefill requests),
-        one fused decode over all fully-prefilled slots, retire finished
-        requests.  Returns
+        """One scheduler tick: preempt victims the policy names, reorder +
+        admit+prefill into free slots (at most one chunk's worth of prefill
+        tokens across all mid-prefill requests), one fused decode over all
+        fully-prefilled slots, retire finished requests.  Returns
         ``{"admitted","finished","new_tokens","active","queued","working"}``.
         """
+        if self.policy is not None:
+            now = time.perf_counter()
+            if self.policy.preemptive and self.paged and self.sched.waiting:
+                for victim in self.policy.victims(
+                        list(self.sched.waiting), dict(self.sched.running),
+                        self.sched.n_free, now):
+                    self._preempt(victim)
+            self.sched.reorder(now)
         admitted = self.sched.admit(fits=self._fits if self.paged else None)
         new_tokens: list = []
         finished: list = []
         cold_group: list = []
         for req in admitted:
+            # a resumed admission must re-materialize prompt + committed
+            # tokens — lookups/prefill run over the CONTEXT, so the parked
+            # blocks alias straight back (fresh request: context == prompt)
+            ctx = req.context
+            resumed = req.preemptions > 0
+            req.prefill_len = req.context_len
             hit_len, entry = 0, None
             if self.prefix_cache is not None:
                 # every admission is one lookup — the cache's hit_rate and
                 # the serving tool's per-admission hit_rate share the same
                 # denominator by construction
-                hit_len, entry = self.prefix_cache.lookup(req.prompt)
+                hit_len, entry = self.prefix_cache.lookup(ctx)
             req.cached_tokens = hit_len
             req.prefix_kv = entry
+            recovered = hit_len // self.block_size \
+                if resumed and self.paged else 0
+            if resumed:
+                self.recovered_tokens += hit_len
+                self.recovered_blocks += recovered
             self._req_handler(req).operator_start(
                 "serve.request.admit", rid=req.rid, slot=req.slot,
-                prompt_len=req.prompt_len, cached_tokens=hit_len,
-                queue_s=req.admit_time - req.submit_time)
+                prompt_len=req.prefill_len, cached_tokens=hit_len,
+                queue_s=req.admit_time - req.submit_time,
+                resumed=resumed, recovered_blocks=recovered)
             if self.paged:
                 self._bind_paged(req, hit_len, entry)
                 req.prefix_kv = None
@@ -516,8 +598,14 @@ class ServeEngine:
         if cold_group:
             self._prefill_unit(cold_group, new_tokens, finished)
         # chunked prefill: one shared FCFS token budget per tick — the total
-        # prefill work between two fused decodes never exceeds one chunk
+        # prefill work between two fused decodes never exceeds one chunk.
+        # interleave="decode" zeroes the budget whenever any slot can
+        # decode: chunk work only runs on decode-idle ticks (max_new_tokens
+        # bounds every decode tail, so deferral is starvation-free)
         budget = self.prefill_chunk
+        if self.interleave == "decode" and self._prefilling \
+                and self._decode_actives():
+            budget = 0
         for req in list(self._prefilling):
             if budget is not None and budget <= 0:
                 break
@@ -529,6 +617,12 @@ class ServeEngine:
             self._spec_decode_step(new_tokens, finished)
         else:
             self._decode_step(new_tokens, finished)
+        if self.policy is not None and new_tokens:
+            # committed-token feedback (fair-share weights, etc.)
+            for rid, _ in new_tokens:
+                r = self.requests.get(rid)
+                if r is not None:
+                    self.policy.note_tokens(r)
         # tick boundary marker: lets per-tick reductions (prefill-stall
         # accounting in the serving tool) close their window even on ticks
         # with no decodable slot
@@ -545,15 +639,17 @@ class ServeEngine:
 
     # -------------------------------------------------------------- prefill
     def _publish(self, req: Request) -> None:
-        """Publish the finished prefill's prompt K/V for reuse.  Paged:
-        retain the slot's own blocks under block-aligned store keys (zero
-        bytes moved).  Legacy: one blocking device->host extract per new
-        prompt (counted in ``duplicate_copy_bytes``)."""
+        """Publish the finished prefill's K/V for reuse.  Paged: retain the
+        slot's own blocks under block-aligned store keys of the admission
+        context (zero bytes moved; the context is the prompt on a fresh
+        admission, prompt + committed tokens on a resumed one).  Legacy:
+        one blocking device->host extract per new prompt (counted in
+        ``duplicate_copy_bytes``)."""
         if self.prefix_cache is None:
             return
         if self.paged:
             self.prefix_cache.insert_blocks(
-                req.prompt, self.pool.tables[req.slot],
+                req.context, self.pool.tables[req.slot],
                 on_retain=lambda ids: self.pool.retain(ids, store=True))
             return
         if self.prefix_cache.covers(req.prompt):
@@ -564,15 +660,20 @@ class ServeEngine:
 
     def _first_token(self, req: Request, logits_row, new_tokens: list,
                      finished: list) -> None:
-        """Sample the prompt's continuation once prefill completes."""
+        """Sample the context's continuation once prefill completes.  On a
+        resumed admission this is NOT the request's first token — the
+        sampling position is ``len(req.tokens)``, exactly the position the
+        unpreempted run would sample next, so preemption never changes a
+        token — and the TTFT clock/event stays with the true first."""
         tok = self._sample_one(req, logits_row)
         req.tokens.append(tok)
-        req.first_token_time = time.perf_counter()
         self.last_tokens[req.slot] = tok
         new_tokens.append((req.rid, tok))
-        self._req_handler(req).operator_start(
-            "serve.request.first_token", rid=req.rid,
-            ttft_s=req.first_token_time - req.submit_time)
+        if not req.first_token_time:
+            req.first_token_time = time.perf_counter()
+            self._req_handler(req).operator_start(
+                "serve.request.first_token", rid=req.rid,
+                ttft_s=req.first_token_time - req.submit_time)
         if req.done:
             self._retire(req, finished)
 
@@ -586,7 +687,8 @@ class ServeEngine:
             "serve.prefill",
             rids=tuple(r.rid for r in reqs),
             slots=tuple(r.slot for r in reqs),
-            n_tokens=int(sum(r.prompt_len - r.cached_tokens for r in reqs)),
+            n_tokens=int(sum(r.prefill_len - r.cached_tokens
+                             for r in reqs)),
             cached=int(sum(r.cached_tokens for r in reqs)),
             group=len(reqs), chunked=False)
         copied_before = self.duplicate_copy_bytes
@@ -614,7 +716,7 @@ class ServeEngine:
             # length — a pad token would update the carried SSM state
             # (input-dependent dt) / MoE routing.
             pow2 = self.cfg.family in _KV_ONLY
-            toks, lens = pad_group([r.prompt for r in reqs], pow2=pow2,
+            toks, lens = pad_group([r.context for r in reqs], pow2=pow2,
                                    max_len=self.max_seq if pow2 else None)
             logits, cache = self._prefill_cold(
                 self.params, jnp.asarray(toks), jnp.asarray(lens - 1))
@@ -623,8 +725,8 @@ class ServeEngine:
             if self.paged:
                 self.pool.insert_prefill(cache, req.slot, row)
             else:
-                self.pool.insert(cache, req.slot, row, req.prompt_len)
-            req.progress = req.prompt_len
+                self.pool.insert(cache, req.slot, row, req.prefill_len)
+            req.progress = req.prefill_len
             self._publish(req)
             req.prefix_kv = None
         self.handler.operator_end(
@@ -640,12 +742,13 @@ class ServeEngine:
         table (per-query causal masking keeps multi-token appends exact)
         and, on the final chunk, sample the first token and publish the
         prompt's blocks.  Returns the tokens prefilled."""
-        remaining = req.prompt_len - req.progress
+        remaining = req.prefill_len - req.progress
         chunk = remaining if budget is None else min(budget, remaining)
         span = self.pool.blocks_per_seq * self.pool.block_size
         s_pad = min(bucket(chunk), span - req.progress)
         toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :chunk] = req.prompt[req.progress:req.progress + chunk]
+        ctx = req.context
+        toks[0, :chunk] = ctx[req.progress:req.progress + chunk]
         first_chunk = req.progress == req.cached_tokens
         self.handler.operator_start(
             "serve.prefill", rids=(req.rid,), slots=(req.slot,),
@@ -858,7 +961,8 @@ class ServeEngine:
             "serve.request.finish", rid=req.rid, n_tokens=n,
             ttft_s=req.first_token_time - req.submit_time,
             total_s=req.finish_time - req.submit_time,
-            drafted=req.drafted, accepted=req.accepted)
+            drafted=req.drafted, accepted=req.accepted,
+            preemptions=req.preemptions)
         if req.session is not None:
             if self.request_tools:
                 self.request_reports.append(req.session.reports())
@@ -868,6 +972,54 @@ class ServeEngine:
         self._retired.append(req.rid)
         while len(self._retired) > self.max_retained_requests:
             self.requests.pop(self._retired.popleft(), None)
+
+    def preempt(self, rid: int) -> bool:
+        """Evict-and-requeue a RUNNING request without losing its work:
+        park its committed KV blocks in the prefix store (refcount holds,
+        zero bytes copied), free the slot, and put it back at the front of
+        the waiting queue.  Re-admission looks up the request's CONTEXT
+        (prompt + committed tokens), aliases the parked blocks straight
+        back, and resumes sampling at the exact position the unpreempted
+        run would use — output is byte-identical, recompute is bounded to
+        the sub-block tail.  Preemptive policies call this through
+        :meth:`step`; it is also a public knob (e.g. manual load
+        shedding).  Paged mode only.  Returns False for requests not
+        currently RUNNING."""
+        req = self.requests.get(rid)
+        if req is None or req.state is not RequestState.RUNNING:
+            return False
+        if not self.paged:
+            raise ValueError(
+                "preemption parks KV in the prefix store, which needs the "
+                "paged pool (non-paged recurrent state cannot re-alias)")
+        self._preempt(req)
+        return True
+
+    def _preempt(self, req: Request) -> None:
+        # cached KV covers `progress` positions mid-prefill; once decoding,
+        # it covers context_len - 1 (the newest sampled token is pending in
+        # last_tokens — its KV is written by the NEXT decode dispatch)
+        kv_len = req.progress if not req.prefilled else req.context_len - 1
+        parked = 0
+        if self.prefix_cache is not None and kv_len >= self.block_size:
+            self.prefix_cache.insert_blocks(
+                req.context[:kv_len], self.pool.tables[req.slot],
+                on_retain=lambda ids: self.pool.retain(ids, store=True))
+            parked = kv_len // self.block_size
+        self.pool.free_slot(req.slot)           # store refs keep parked KV
+        if req in self._prefilling:
+            self._prefilling.remove(req)
+        self._owed.pop(req.rid, None)
+        self.preemptions += 1
+        self.parked_blocks += parked
+        self._req_handler(req).operator_start(
+            "serve.request.preempt", rid=req.rid, slot=req.slot,
+            n_tokens=len(req.tokens), kv_len=kv_len, parked_blocks=parked)
+        req.progress = 0
+        req.cached_tokens = 0
+        req.prefill_len = None
+        req.prefix_kv = None
+        self.sched.preempt(req)
 
     def abort(self, rid: int) -> bool:
         """Cancel a request at any lifecycle stage: drop it from the queue

@@ -1,11 +1,19 @@
-"""Continuous-batching scheduler: FCFS admission over a fixed slot set.
+"""Continuous-batching scheduler: policy-ordered admission over a fixed
+slot set.
 
 The scheduler owns request lifecycle bookkeeping and nothing device-side:
 ``waiting`` is an arrival-ordered queue, ``running`` maps KV-pool slot →
-request, and admission (:meth:`Scheduler.admit`) moves requests FCFS into
-free slots — the engine prefills them into those slots the same tick.
+request, and admission (:meth:`Scheduler.admit`) moves requests into free
+slots — the engine prefills them into those slots the same tick.  An
+:class:`~repro.serve.slo.SLOPolicy` may stable-sort the waiting queue
+first (:meth:`Scheduler.reorder`); with no policy (or FCFS) admission is
+pure arrival order, byte-identical to the policy-free scheduler.
 Retirement (:meth:`Scheduler.release`) returns the slot to the allocator;
-the pool bytes are reused in place by the next admission.
+the pool bytes are reused in place by the next admission.  Preemption
+(:meth:`Scheduler.preempt`) is the inverse of admission: the slot returns
+to the allocator and the request rejoins the FRONT of the waiting queue
+still carrying its generated tokens — the engine parks its KV blocks in
+the prefix store so re-admission aliases them back.
 
 Ragged prompt handling is right-padding: :func:`pad_group` pads a cold
 admission group to a shared power-of-two bucket.  Causality makes the pad
@@ -73,15 +81,45 @@ class Request:
     session: object = None
     #: transient: prefix-cache entry chosen at admission
     prefix_kv: dict | None = None
+    #: service-level objectives + tenant/priority tags (None = untagged)
+    slo: object = None
+    #: times this request was preempted (evicted-and-requeued)
+    preemptions: int = 0
+    #: context length the CURRENT admission must prefill to before the
+    #: request can decode — ``prompt_len`` on a fresh admission, and
+    #: ``prompt_len + len(tokens)`` when resuming after preemption (the
+    #: generated prefix must be back in the cache first).  None = fresh.
+    prefill_len: int | None = None
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
     @property
+    def context(self) -> np.ndarray:
+        """Prompt plus every committed token — what a resumed prefill must
+        (re)materialize in the KV cache.  Equals ``prompt`` before the
+        first token."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate([self.prompt,
+                               np.asarray(self.tokens, np.int32)])
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + len(self.tokens)
+
+    @property
+    def tenant(self) -> str:
+        return self.slo.tenant if self.slo is not None else "default"
+
+    @property
     def prefilled(self) -> bool:
-        """Whole prompt is in the cache — the request decodes from here."""
-        return self.progress >= self.prompt_len
+        """The admission's whole context is in the cache — the request
+        decodes from here."""
+        target = self.prompt_len if self.prefill_len is None \
+            else self.prefill_len
+        return self.progress >= target
 
     @property
     def done(self) -> bool:
@@ -93,10 +131,12 @@ class Request:
 
 
 class Scheduler:
-    """FCFS continuous batching: admit into free slots, release on retire."""
+    """Continuous batching: admit into free slots (policy-ordered, FCFS by
+    default), release on retire, preempt back to the queue head."""
 
-    def __init__(self, max_slots: int):
+    def __init__(self, max_slots: int, policy=None):
         self.max_slots = max_slots
+        self.policy = policy                    # SLOPolicy | None
         self.waiting: collections.deque = collections.deque()
         self.running: dict = {}                 # slot -> Request
         self._free = list(range(max_slots - 1, -1, -1))   # pop() -> ascending
@@ -123,13 +163,26 @@ class Scheduler:
         req.submit_time = req.submit_time or time.perf_counter()
         self.waiting.append(req)
 
+    def reorder(self, now: float | None = None) -> None:
+        """Stable-sort the waiting queue by the policy's key.  Ties keep
+        arrival order; FCFS (``orders=False``) and no-policy skip the sort
+        entirely, so the default path stays byte-identical."""
+        if self.policy is None or not getattr(self.policy, "orders", False) \
+                or len(self.waiting) < 2:
+            return
+        now = time.perf_counter() if now is None else now
+        key = self.policy.key
+        self.waiting = collections.deque(
+            sorted(self.waiting, key=lambda r: key(r, now)))
+
     def admit(self, fits=None) -> list:
-        """Move waiting requests FCFS into free slots; returns the admitted
+        """Move waiting requests into free slots in queue order (arrival
+        order unless :meth:`reorder` ran first); returns the admitted
         requests with ``slot``/``state``/``admit_time`` assigned.  ``fits``
         (req -> bool) gates admission on resources beyond slots (the paged
-        engine passes a block-availability check); FCFS order is preserved —
-        a head-of-line request that does not fit blocks the queue rather
-        than being overtaken."""
+        engine passes a block-availability check); queue order is
+        preserved — a head-of-line request that does not fit blocks the
+        queue rather than being overtaken."""
         out = []
         now = time.perf_counter()
         while self.waiting and self._free:
@@ -153,6 +206,23 @@ class Scheduler:
         req.slot = None
         req.state = state
         req.finish_time = time.perf_counter()
+
+    def preempt(self, req: Request) -> None:
+        """Evict-and-requeue: return the slot to the allocator and put the
+        request back at the FRONT of the waiting queue, still carrying its
+        generated tokens (state QUEUED — it competes for re-admission like
+        any arrival, but a policy reorder sees its original submit time /
+        priority).  The engine parks its KV first; see
+        ``ServeEngine.preempt``."""
+        if req.slot is None or self.running.get(req.slot) is not req:
+            raise ValueError(f"request {req.rid} does not hold a slot")
+        del self.running[req.slot]
+        self._free.append(req.slot)
+        self._free.sort(reverse=True)           # deterministic ascending pops
+        req.slot = None
+        req.state = RequestState.QUEUED
+        req.preemptions += 1
+        self.waiting.appendleft(req)
 
     def remove_waiting(self, req: Request) -> bool:
         """Drop a still-queued request (abort path); False if not queued."""

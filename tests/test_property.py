@@ -170,6 +170,77 @@ def _paged_pool_invariants(pool, stored):
     assert pool.available() == st["blocks_free"] + st["blocks_evictable"]
 
 
+_SERVE: dict = {}
+
+
+def _serve_fixture():
+    """One lazily-built engine + solo reference outputs, shared across
+    examples: jit caches are per-engine-instance, so rebuilding per draw
+    would recompile everything.  Temperature-0 sampling is keyed on
+    position, so outputs are independent of request ids and of how the
+    examples interleave."""
+    if not _SERVE:
+        import repro.configs as C
+        from repro.models import init_params
+        from repro.serve import SamplingParams, ServeEngine
+
+        cfg = C.reduced(C.get("paper-gpt2"))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, cfg.vocab_size, (n,), dtype=np.int32)
+                   for n in (5, 9, 12, 17, 23, 30)]
+        sp = SamplingParams(max_new_tokens=6)
+        eng = ServeEngine(cfg, params, max_seq=48, max_slots=3,
+                          prefix_block=8, prefill_chunk=16,
+                          policy="priority")
+        refs = [list(eng.run([(p, sp)]).values())[0] for p in prompts]
+        _SERVE.update(eng=eng, prompts=prompts, refs=refs, sp=sp)
+    return _SERVE
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 5)),
+                min_size=1, max_size=30))
+def test_engine_random_submit_step_preempt_abort(ops_list):
+    """Random submit / step / preempt / abort sequences against an
+    undersized engine keep every paged-pool invariant, and whatever
+    finishes is byte-identical to its solo reference — preemption and
+    aborts never corrupt another request's stream."""
+    from repro.serve.scheduler import RequestState
+
+    fx = _serve_fixture()
+    eng, prompts, refs, sp = (fx["eng"], fx["prompts"], fx["refs"],
+                              fx["sp"])
+    from repro.serve.slo import SLOSpec
+    mine: dict = {}                        # rid -> prompt index
+    for op, idx in ops_list:
+        if op == 0:                        # submit (priorities vary)
+            rid = eng.submit(prompts[idx],
+                             sp, slo=SLOSpec(priority=idx % 3))
+            mine[rid] = idx
+        elif op == 1 and eng.sched.has_work:
+            eng.step()
+        elif op == 2:                      # preempt a running request
+            running = sorted(r.rid for r in eng.sched.running.values())
+            if running:
+                eng.preempt(running[idx % len(running)])
+        elif op == 3:                      # abort a live request
+            live = sorted(r.rid for r in list(eng.sched.waiting)
+                          + list(eng.sched.running.values()))
+            if live:
+                eng.abort(live[idx % len(live)])
+        _paged_pool_invariants(eng.pool, [])
+    while eng.sched.has_work:              # drain so examples are isolated
+        eng.step()
+        _paged_pool_invariants(eng.pool, [])
+    assert not any(eng._owed.values()), eng._owed
+    for rid, idx in mine.items():
+        req = eng.requests.get(rid)
+        if req is not None and req.state is RequestState.FINISHED:
+            assert list(req.tokens) == list(refs[idx]), \
+                (rid, idx, req.preemptions)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 3),
                           st.integers(1, 40)),

@@ -1,0 +1,543 @@
+"""SLO-aware multi-tenant scheduling: policies, preemption, traffic.
+
+The load-bearing guarantees of the scheduling subsystem:
+
+  * preemption is LOSSLESS: a preempted request's committed KV blocks park
+    in the prefix store (refcount holds, zero copies) and re-admission
+    aliases them back, so outputs stay byte-identical to an unpreempted
+    solo run — at temperature 0 and at temperature > 0 (sampling is keyed
+    on (seed, position), never on batch composition);
+  * policies only decide ORDER — FCFS/priority/EDF runs of the same
+    submissions produce identical per-request tokens;
+  * admission block reservations (``_owed``) are released exactly on
+    abort/preempt/retire: the pool always comes back whole;
+  * the traffic generator is deterministic in its seed and round-trips
+    through JSONL;
+  * the serving tool reports per-tenant SLO attainment, goodput and
+    preemption/recovery counters.
+"""
+
+import functools
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.configs as C
+import repro.core as pasta
+from repro.models import init_params
+from repro.serve import (EDFPolicy, FairSharePolicy, FCFSPolicy, POLICIES,
+                         PriorityPolicy, SamplingParams, Scheduler,
+                         ServeEngine, SLOSpec, TenantSpec, get_policy,
+                         load_trace, make_trace, max_seq_for, save_trace,
+                         two_tenant_bursty)
+from repro.serve.scheduler import Request, RequestState
+from repro.serve.traffic import PRESETS, _interarrivals
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch="paper-gpt2"):
+    cfg = C.reduced(C.get(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(rid, slo=None, tokens=(), submit_time=1.0, prompt_len=4):
+    r = Request(rid=rid, prompt=np.arange(prompt_len, dtype=np.int32),
+                params=SamplingParams(), slo=slo, submit_time=submit_time)
+    r.tokens = list(tokens)
+    return r
+
+
+# ------------------------------------------------------------ policy units
+def test_get_policy_resolution_and_errors():
+    assert get_policy(None) is None
+    inst = PriorityPolicy(preempt=False)
+    assert get_policy(inst) is inst and not inst.preemptive
+    assert isinstance(get_policy("fcfs"), FCFSPolicy)
+    assert isinstance(get_policy("edf"), EDFPolicy)
+    assert set(POLICIES) == {"fcfs", "priority", "edf", "fair"}
+    # stateful policies must come out fresh per engine
+    assert get_policy("fair") is not get_policy("fair")
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        get_policy("sjf")
+
+
+def test_fcfs_policy_never_reorders():
+    sched = Scheduler(1, policy=get_policy("fcfs"))
+    hi = _req(0, SLOSpec(priority=9))
+    lo = _req(1, SLOSpec(priority=0))
+    sched.submit(lo)
+    sched.submit(hi)
+    sched.reorder(0.0)
+    assert [r.rid for r in sched.waiting] == [1, 0]   # arrival order kept
+
+
+def test_priority_policy_orders_and_evicts_youngest_lowest():
+    pol = get_policy("priority")
+    sched = Scheduler(2, policy=pol)
+    lo0, lo1 = _req(0, SLOSpec(priority=0)), _req(1, SLOSpec(priority=0))
+    hi = _req(2, SLOSpec(priority=5))
+    untagged = _req(3)                                # priority 0 default
+    for r in (lo0, lo1, hi, untagged):
+        sched.submit(r)
+    sched.reorder(0.0)
+    assert [r.rid for r in sched.waiting] == [2, 0, 1, 3]
+    # both slots held by lo, hi waits: the YOUNGEST lowest-priority running
+    # request is the victim (least sunk work)
+    assert pol.victims([hi], {0: lo0, 1: lo1}, 0, 0.0) == [lo1]
+    # a free slot satisfies the waiter — no eviction
+    assert pol.victims([hi], {0: lo0, 1: lo1}, 1, 0.0) == []
+    # equal priority never preempts (strict inequality)
+    assert pol.victims([lo0], {0: lo1, 1: hi}, 0, 0.0) == []
+    # two high waiters, two low runners: both evicted, youngest first
+    hi2 = _req(4, SLOSpec(priority=5))
+    assert pol.victims([hi, hi2], {0: lo0, 1: lo1}, 0, 0.0) == [lo1, lo0]
+
+
+def test_edf_policy_deadline_order_and_first_token_guard():
+    pol = get_policy("edf")
+    a = _req(0, SLOSpec(ttft_target_s=5.0), submit_time=10.0)   # ddl 15
+    b = _req(1, SLOSpec(ttft_target_s=1.0), submit_time=12.0)   # ddl 13
+    c = _req(2)                                                 # no target
+    sched = Scheduler(1, policy=pol)
+    for r in (a, b, c):
+        sched.submit(r)
+    sched.reorder(0.0)
+    assert [r.rid for r in sched.waiting] == [1, 0, 2]   # targetless last
+    # preemption only targets runners that have NOT produced a first token
+    decoding = _req(3, tokens=[7])
+    fresh = _req(4)
+    assert pol.victims([b], {0: decoding, 1: fresh}, 0, 0.0) == [fresh]
+    assert pol.victims([b], {0: decoding}, 0, 0.0) == []
+    # an earlier-deadline runner is never evicted for a later waiter
+    urgent = _req(5, SLOSpec(ttft_target_s=0.1), submit_time=10.0)
+    assert pol.victims([a], {0: urgent}, 0, 0.0) == []
+
+
+def test_fair_share_policy_orders_by_served_tokens():
+    pol = get_policy("fair")
+    chatty = _req(0, SLOSpec(tenant="chatty"))
+    quiet = _req(1, SLOSpec(tenant="quiet"))
+    for _ in range(5):
+        pol.note_tokens(chatty)
+    sched = Scheduler(1, policy=pol)
+    sched.submit(chatty)
+    sched.submit(quiet)
+    sched.reorder(0.0)
+    assert [r.rid for r in sched.waiting] == [1, 0]   # least-served first
+    assert pol.served == {"chatty": 5}
+
+
+def test_scheduler_preempt_requeues_front_with_tokens():
+    sched = Scheduler(1)
+    r = _req(0, tokens=[5, 6])
+    sched.submit(r)
+    sched.admit()
+    assert r.state is RequestState.RUNNING and sched.n_free == 0
+    sched.submit(_req(1))
+    sched.preempt(r)
+    assert r.state is RequestState.QUEUED and r.slot is None
+    assert r.preemptions == 1 and r.tokens == [5, 6]
+    assert [q.rid for q in sched.waiting] == [0, 1]   # front of the queue
+    assert sched.n_free == 1
+    with pytest.raises(ValueError, match="does not hold a slot"):
+        sched.preempt(r)
+
+
+# ----------------------------------------------------------------- traffic
+def test_make_trace_deterministic_sorted_and_tenant_independent():
+    ten = [TenantSpec(name="a", n_requests=6, rate=40.0, arrival="poisson",
+                      shared_prefix=8, prefix_pool=2, priority=1),
+           TenantSpec(name="b", n_requests=5, rate=25.0, arrival="gamma",
+                      cv2=4.0, start_s=0.1, ttft_target_s=0.5)]
+    t1 = make_trace(ten, vocab=97, seed=3)
+    t2 = make_trace(ten, vocab=97, seed=3)
+    assert len(t1) == 11
+    assert all(x.arrival_s <= y.arrival_s for x, y in zip(t1, t1[1:]))
+    for x, y in zip(t1, t2):
+        assert x.arrival_s == y.arrival_s and x.max_new_tokens == \
+            y.max_new_tokens and np.array_equal(x.prompt, y.prompt)
+    assert any(not np.array_equal(x.prompt, y.prompt) for x, y in
+               zip(t1, make_trace(ten, vocab=97, seed=4)))
+    # per-tenant streams: adding a tenant never perturbs another's trace
+    solo_a = make_trace(ten[:1], vocab=97, seed=3)
+    both_a = [t for t in t1 if t.tenant == "a"]
+    for x, y in zip(solo_a, both_a):
+        assert x.arrival_s == y.arrival_s and np.array_equal(x.prompt,
+                                                             y.prompt)
+    assert max_seq_for(t1, pad=4) == max(len(t.prompt) + t.max_new_tokens
+                                         for t in t1) + 4
+
+
+def test_arrival_processes_rate_and_clumping():
+    spec = TenantSpec(n_requests=64, rate=10.0, arrival="burst",
+                      burst_size=4)
+    gaps = _interarrivals(spec, np.random.default_rng(0))
+    # burst: arrivals land in simultaneous clumps of burst_size
+    assert len(set(gaps.tolist())) == 16
+    assert _interarrivals(TenantSpec(n_requests=5, rate=0.0),
+                          np.random.default_rng(0)).tolist() == [0.0] * 5
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        _interarrivals(TenantSpec(arrival="lognormal", rate=1.0),
+                       np.random.default_rng(0))
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    ten = [TenantSpec(name="t", n_requests=4, rate=5.0, shared_prefix=4,
+                      priority=2, ttft_target_s=0.25)]
+    trace = make_trace(ten, vocab=50, seed=1)
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, trace, seed=1, meta={"note": "x"})
+    back, meta = load_trace(path)
+    assert meta["seed"] == 1 and meta["note"] == "x"
+    assert meta["n_requests"] == len(back) == len(trace)
+    for x, y in zip(trace, back):
+        assert np.array_equal(x.prompt, y.prompt)
+        assert x.arrival_s == y.arrival_s
+        assert x.max_new_tokens == y.max_new_tokens
+        assert x.slo == y.slo
+
+
+def test_two_tenant_bursty_preset():
+    trace = two_tenant_bursty(vocab=64, seed=0)
+    assert PRESETS["two-tenant-bursty"] is two_tenant_bursty
+    tenants = {t.tenant for t in trace}
+    assert tenants == {"lo", "hi"}
+    hi = [t for t in trace if t.tenant == "hi"]
+    lo = [t for t in trace if t.tenant == "lo"]
+    assert all(t.slo.priority == 5 and t.arrival_s >= 0.15 for t in hi)
+    assert all(t.slo.priority == 0 and t.arrival_s == 0.0 for t in lo)
+    assert all(t.max_new_tokens < min(x.max_new_tokens for x in lo)
+               for t in hi)
+
+
+# -------------------------------------------------------------- preemption
+def _solo(cfg, params, prompt, max_new, **kw):
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=1, prefix_block=8,
+                      **kw)
+    out = eng.run([(prompt, SamplingParams(max_new_tokens=max_new))])
+    return list(out.values())[0]
+
+
+def _mixed_run(cfg, params, lo_prompts, hi_prompts, temperature=0.0, **kw):
+    """2 lo requests decode for 3 ticks, then 2 hi (priority 5) burst in;
+    returns (engine, session report, lo rids, hi rids)."""
+    with pasta.Session(tools="serving", name="mix") as sess:
+        eng = ServeEngine(cfg, params, max_seq=64, max_slots=2,
+                          session=sess, prefix_block=8, **kw)
+        lo = [eng.submit(p, SamplingParams(max_new_tokens=12,
+                                           temperature=temperature),
+                         slo=SLOSpec(tenant="lo", priority=0,
+                                     ttft_target_s=60.0))
+              for p in lo_prompts]
+        for _ in range(3):
+            eng.step()
+        hi = [eng.submit(p, SamplingParams(max_new_tokens=4,
+                                           temperature=temperature),
+                         slo=SLOSpec(tenant="hi", priority=5,
+                                     ttft_target_s=60.0))
+              for p in hi_prompts]
+        while eng.sched.has_work:
+            eng.step()
+    return eng, sess.reports()["serving"].data, lo, hi
+
+
+def test_priority_preemption_byte_identical_to_solo():
+    """The tentpole guarantee: preempt → park in prefix store → resume
+    aliases back, outputs byte-identical to unpreempted solo runs, zero
+    duplicate copies, pool accounting whole."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    lo_p = [rng.integers(0, cfg.vocab_size, (12,), dtype=np.int32)
+            for _ in range(2)]
+    hi_p = [rng.integers(0, cfg.vocab_size, (10,), dtype=np.int32)
+            for _ in range(2)]
+    refs_lo = [_solo(cfg, params, p, 12) for p in lo_p]
+    refs_hi = [_solo(cfg, params, p, 4) for p in hi_p]
+
+    eng, rep, lo, hi = _mixed_run(cfg, params, lo_p, hi_p,
+                                  policy="priority")
+    assert eng.preemptions == 2 and eng.parked_blocks > 0
+    assert eng.recovered_blocks > 0 and eng.recovered_tokens > 0
+    assert eng.duplicate_copy_bytes == 0
+    for rid, want in zip(lo, refs_lo):
+        assert eng.requests[rid].preemptions == 1
+        assert list(eng.requests[rid].tokens) == list(want)
+    for rid, want in zip(hi, refs_hi):
+        assert list(eng.requests[rid].tokens) == list(want)
+    eng.pool.scrub()
+    st = eng.pool.stats()
+    assert (st["blocks_live"] + st["blocks_evictable"] + st["blocks_free"]
+            == st["n_blocks"]), st
+
+    # serving-tool accounting of the same run
+    assert rep["preemption"]["count"] == 2
+    assert rep["preemption"]["resumed"] == 2
+    assert rep["preemption"]["parked_blocks"] == eng.parked_blocks
+    assert rep["preemption"]["recovered_blocks"] == eng.recovered_blocks
+    assert rep["tenants"]["lo"]["preemptions"] == 2
+    assert rep["tenants"]["hi"]["preemptions"] == 0
+    assert rep["slo"]["attainment"] == 1.0          # 60 s targets: all met
+    assert rep["slo"]["good_tokens"] == rep["generated_tokens"]
+    assert 0 < rep["slo"]["jain_fairness"] <= 1
+    rows = rep["by_request"]
+    assert all(rows[rid]["tenant"] == "lo" and rows[rid]["preempts"] == 1
+               and rows[rid]["slo_met"] for rid in lo)
+    assert all(rows[rid]["tenant"] == "hi" for rid in hi)
+
+
+def test_preemption_schedule_invariant_at_temperature():
+    """Sampling keys on (seed, position) — so even at temperature > 0 a
+    preempting policy and FCFS produce identical streams per request."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    lo_p = [rng.integers(0, cfg.vocab_size, (12,), dtype=np.int32)
+            for _ in range(2)]
+    hi_p = [rng.integers(0, cfg.vocab_size, (10,), dtype=np.int32)
+            for _ in range(2)]
+    eng_f, _, lo_f, hi_f = _mixed_run(cfg, params, lo_p, hi_p,
+                                      temperature=0.8, policy="fcfs")
+    eng_p, _, lo_p2, hi_p2 = _mixed_run(cfg, params, lo_p, hi_p,
+                                        temperature=0.8, policy="priority")
+    assert eng_f.preemptions == 0 and eng_p.preemptions == 2
+    for a, b in zip(lo_f + hi_f, lo_p2 + hi_p2):
+        assert list(eng_f.requests[a].tokens) == \
+            list(eng_p.requests[b].tokens)
+
+
+def test_mid_prefill_preemption_resumes_exactly():
+    """Preempting a request that has only chunk-prefilled part of its
+    prompt restarts cleanly: the finished prefix parks (block-aligned) and
+    the resumed admission completes the prompt, matching solo output."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, (40,), dtype=np.int32)
+    want = _solo(cfg, params, prompt, 6, prefill_chunk=8)
+
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=1, prefix_block=8,
+                      prefill_chunk=8)
+    rid = eng.submit(prompt, SamplingParams(max_new_tokens=6))
+    eng.step()                                  # one 8-token chunk in
+    req = eng.requests[rid]
+    assert 0 < req.progress < req.prompt_len and not req.prefilled
+    assert eng.preempt(rid) is True
+    assert req.state is RequestState.QUEUED and req.progress == 0
+    while eng.sched.has_work:
+        eng.step()
+    assert list(req.tokens) == list(want)
+    assert eng.preemptions == 1 and eng.recovered_blocks > 0
+
+
+def test_preempt_validation_and_interleave_errors():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=1, prefix_block=8)
+    assert eng.preempt(123) is False            # unknown rid
+    eng.submit(np.arange(1, 9, dtype=np.int32),
+               SamplingParams(max_new_tokens=2))
+    rid2 = eng.submit(np.arange(1, 9, dtype=np.int32),
+                      SamplingParams(max_new_tokens=2))
+    assert eng.preempt(rid2) is False           # QUEUED, not RUNNING
+    eng.abort_all()
+
+    # preemptive policies need the paged pool to park KV
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, max_seq=32, max_slots=1, paged=False,
+                    policy="priority")
+    # ... but a non-preemptive priority policy is fine without it
+    ServeEngine(cfg, params, max_seq=32, max_slots=1, paged=False,
+                policy=PriorityPolicy(preempt=False))
+    with pytest.raises(ValueError, match="interleave"):
+        ServeEngine(cfg, params, max_seq=32, max_slots=1,
+                    interleave="sideways")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(cfg, params, max_seq=32, max_slots=1,
+                    interleave="decode")
+
+
+def test_legacy_dense_pool_rejects_preempt():
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=1, paged=False)
+    rid = eng.submit(np.arange(1, 9, dtype=np.int32),
+                     SamplingParams(max_new_tokens=4))
+    eng.step()
+    assert eng.requests[rid].state is RequestState.RUNNING
+    with pytest.raises(ValueError, match="paged"):
+        eng.preempt(rid)
+    eng.abort_all()
+
+
+def test_interleave_decode_defers_prefill_until_decode_idle():
+    """interleave='decode': chunk work only runs on decode-idle ticks, so
+    a cold prompt makes zero prefill progress while another slot decodes —
+    and arbitration never changes the sampled tokens."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    short = rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+    long_p = rng.integers(0, cfg.vocab_size, (40,), dtype=np.int32)
+    want_short = _solo(cfg, params, short, 8, prefill_chunk=8)
+    want_long = _solo(cfg, params, long_p, 4, prefill_chunk=8)
+
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=2, prefix_block=8,
+                      prefill_chunk=8, interleave="decode")
+    rid_s = eng.submit(short, SamplingParams(max_new_tokens=8))
+    eng.step()
+    assert eng.requests[rid_s].prefilled
+    rid_l = eng.submit(long_p, SamplingParams(max_new_tokens=4))
+    req_s, req_l = eng.requests[rid_s], eng.requests[rid_l]
+    while eng.sched.has_work:
+        eng.step()
+        if req_s.state is RequestState.RUNNING and req_s.prefilled:
+            # decode-priority: the cold prompt must not advance this tick
+            assert req_l.progress == 0
+    assert req_l.first_token_time > req_s.finish_time
+    assert list(req_s.tokens) == list(want_short)
+    assert list(req_l.tokens) == list(want_long)
+
+
+# --------------------------------------------- admission reservations/abort
+def test_abort_releases_owed_reservations_and_blocks_exactly():
+    """Aborting queued and running requests restores the pool to the exact
+    block count it had, and ``_owed`` only ever tracks running requests —
+    a queued request that never admitted holds no reservation."""
+    cfg, params = _setup()
+    # 6 blocks of 8 tokens: one 32-token-horizon request owes 4 blocks, so
+    # a second identical one cannot fit and queues (prefix cache off keeps
+    # the ledger pure — no store-held blocks)
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=2, block_size=8,
+                      n_blocks=6, prefix_cache=False)
+    free0 = eng.pool.available()
+    assert free0 == 6
+    sp = SamplingParams(max_new_tokens=16)
+    rng = np.random.default_rng(4)
+    r1 = eng.submit(rng.integers(0, cfg.vocab_size, (16,), np.int32)
+                    .astype(np.int32), sp)
+    r2 = eng.submit(rng.integers(0, cfg.vocab_size, (16,), np.int32)
+                    .astype(np.int32), sp)
+    eng.step()
+    assert eng.requests[r1].state is RequestState.RUNNING
+    assert eng.requests[r2].state is RequestState.QUEUED
+    assert set(eng._owed) <= {r1}               # no reservation for queued
+    # aborting the queued request changes nothing in the pool ledger
+    avail_before = eng.pool.available()
+    owed_before = sum(eng._owed.values())
+    assert eng.abort(r2)
+    assert eng.pool.available() == avail_before
+    assert sum(eng._owed.values()) == owed_before
+    # aborting the running request restores every block
+    assert eng.abort(r1)
+    assert not eng._owed
+    eng.pool.scrub()
+    assert eng.pool.available() == eng.pool.n_free == free0
+    # the whole pool is usable again: a full-capacity request drains fine
+    r3 = eng.submit(rng.integers(0, cfg.vocab_size, (32,), np.int32)
+                    .astype(np.int32), SamplingParams(max_new_tokens=16))
+    while eng.sched.has_work:
+        eng.step()
+    assert eng.requests[r3].state is RequestState.FINISHED
+    assert len(eng.requests[r3].tokens) == 16
+
+
+def test_preempted_then_aborted_request_frees_parked_blocks_on_evict():
+    """A preempted request's parked blocks are store-held (evictable, not
+    leaked): aborting it while queued leaves them reclaimable and the pool
+    balances after eviction."""
+    cfg, params = _setup()
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=1, prefix_block=8)
+    rng = np.random.default_rng(5)
+    rid = eng.submit(rng.integers(0, cfg.vocab_size, (16,), np.int32)
+                     .astype(np.int32), SamplingParams(max_new_tokens=8))
+    for _ in range(3):
+        eng.step()
+    assert eng.preempt(rid)
+    assert eng.abort(rid)
+    st = eng.pool.stats()
+    assert st["blocks_live"] == 0               # nothing held by slots
+    assert st["blocks_evictable"] > 0           # parked KV, reclaimable
+    assert eng.pool.available() == st["n_blocks"]
+    assert (st["blocks_live"] + st["blocks_evictable"] + st["blocks_free"]
+            == st["n_blocks"]), st
+
+
+# ------------------------------------------------------- serving-tool SLO
+def test_serving_tool_slo_attainment_and_tenant_sections():
+    """Deterministic SLO accounting: impossible (1 ns) targets miss, lax
+    (1e9 s) targets meet; goodput counts only SLO-meeting requests."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+               for _ in range(4)]
+    ok = SLOSpec(ttft_target_s=1e9, tpot_target_s=1e9, tenant="batch")
+    bad = SLOSpec(ttft_target_s=1e-9, tenant="rt")
+    with pasta.Session(tools="serving", name="slo") as sess:
+        eng = ServeEngine(cfg, params, max_seq=32, max_slots=2,
+                          session=sess, prefix_block=8)
+        sp = SamplingParams(max_new_tokens=4)
+        for p, slo in zip(prompts, (ok, ok, bad, bad)):
+            eng.submit(p, sp, slo=slo)
+        while eng.sched.has_work:
+            eng.step()
+    rep = sess.reports()["serving"].data
+    assert rep["slo"]["attainment"] == 0.5
+    assert rep["slo"]["good_tokens"] == 8       # the two "batch" requests
+    assert rep["slo"]["goodput_tok_per_s"] > 0
+    assert 0 < rep["slo"]["jain_fairness"] <= 1
+    bt = rep["tenants"]
+    assert set(bt) == {"batch", "rt"}
+    assert bt["batch"]["slo_attainment"] == 1.0
+    assert bt["rt"]["slo_attainment"] == 0.0
+    assert bt["rt"]["goodput_tok_per_s"] == 0.0
+    assert bt["batch"]["generated_tokens"] == 8
+    assert bt["batch"]["ttft_s"]["p50"] > 0
+    met = [r["slo_met"] for r in rep["by_request"].values()]
+    assert sorted(met) == [False, False, True, True]
+    # untagged traffic keeps the legacy shape: no tenants beyond "default"
+    assert rep["preemption"]["count"] == 0
+
+
+# ----------------------------------------------------------------- driver
+def test_serve_driver_traffic_policy_and_trace_roundtrip(tmp_path):
+    """--traffic preset + --policy priority + --save-trace: the JSON
+    carries policy/SLO/preemption sections and the saved JSONL replays the
+    exact preset trace (satellite: trace seed recorded for replay)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    path = tmp_path / "serve.json"
+    trace_path = tmp_path / "trace.jsonl"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--reduced",
+         "--traffic", "two-tenant-bursty", "--policy", "priority",
+         "--max-slots", "2", "--prefix-block", "8", "--prefill-chunk", "32",
+         "--seed", "5", "--save-trace", str(trace_path),
+         "--json", str(path)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr
+    out = json.loads(path.read_text())
+    assert out["status"] == "ok"
+    assert out["config"]["policy"] == "priority"
+    assert out["config"]["traffic"] == "two-tenant-bursty"
+    assert out["config"]["trace_seed"] == 5
+    s = out["summary"]
+    assert s["preemption"]["count"] > 0
+    assert s["preemption"]["recovered_blocks"] > 0
+    assert s["pool"]["duplicate_copy_bytes"] == 0
+    assert set(s["tenants"]) == {"lo", "hi"}
+    assert s["slo"]["goodput_tok_per_s"] > 0
+    # the saved trace replays the preset byte-for-byte
+    back, meta = load_trace(str(trace_path))
+    assert meta["seed"] == 5 and meta["preset"] == "two-tenant-bursty"
+    cfg, _ = _setup()
+    want = two_tenant_bursty(cfg.vocab_size, seed=5)
+    assert len(back) == len(want) == meta["n_requests"]
+    for x, y in zip(back, want):
+        assert np.array_equal(x.prompt, y.prompt)
+        assert x.arrival_s == y.arrival_s
+        assert x.max_new_tokens == y.max_new_tokens
+        assert x.slo == y.slo
