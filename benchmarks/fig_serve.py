@@ -43,6 +43,13 @@ controlled trace instead of eyeballing throughput.  Two sections:
   (tokens from SLO-meeting requests per wall second) stays within 10% of
   FCFS — preempted work is parked, not lost.
 
+* **Chaos sweep** — the same trace runs fault-free and under the seeded
+  ``transient`` / ``storm`` / ``one-poison`` chaos presets.  Asserted:
+  zero innocent-request loss with byte-identical innocent outputs in
+  every scenario, exactly one ``failed`` request under the persistent
+  poison, balanced pool accounting and zero duplicate KV copies after
+  recovery.  The chaos/fault-free goodput ratio is snapshotted.
+
 Part of ``benchmarks.run --smoke``; payload snapshotted to
 ``BENCH_serve.json`` at the repo root for the per-PR perf trajectory.
 """
@@ -411,11 +418,109 @@ def policy_sweep(arch: str = "paper-gpt2") -> dict:
             "lo_new": LO_NEW, "hi_new": HI_NEW, "sweep": points}
 
 
+CHAOS_MAX_NEW = 16
+CHAOS_SLOTS = 4
+CHAOS_SEED = 0
+CHAOS_PRESETS = ("transient", "storm", "one-poison")
+
+
+def chaos_sweep(arch: str = "paper-gpt2") -> dict:
+    """Fault-free twin vs seeded chaos presets on the identical trace.
+
+    Asserted: under ``transient``/``storm`` zero requests are lost and
+    every output is byte-identical to the fault-free twin; under
+    ``one-poison`` exactly the poisoned request ends ``failed`` while
+    every innocent finishes byte-identically; pool block accounting
+    balances after every run and no recovery path copies KV bytes.  The
+    chaos/fault-free goodput ratio is snapshotted (timing, not asserted:
+    stall windows are real wall time)."""
+    import jax
+
+    import repro.configs as C
+    import repro.core as pasta
+    from repro.models import init_params
+    from repro.serve import SamplingParams, ServeEngine
+
+    cfg = C.reduced(C.get(arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _trace(cfg, seed=3)
+    sp = SamplingParams(max_new_tokens=CHAOS_MAX_NEW)
+
+    def one(preset):
+        with pasta.Session(tools="serving",
+                           name=f"bench/chaos-{preset or 'off'}") as sess:
+            eng = ServeEngine(cfg, params, max_seq=64, max_slots=CHAOS_SLOTS,
+                              session=sess, prefix_block=PREFIX_BLOCK,
+                              faults=preset, fault_seed=CHAOS_SEED)
+            eng.warmup(sorted({len(p) for p in prompts}))
+            t0 = time.perf_counter()
+            for p in prompts[:5]:
+                eng.submit(p, sp)
+            eng.step()
+            for p in prompts[5:]:
+                eng.submit(p, sp)
+            while eng.has_work:
+                eng.step()
+            wall = time.perf_counter() - t0
+        rep = sess.reports()["serving"].data
+        outs = {rid: list(eng.requests[rid].tokens) for rid in eng.requests}
+        states = {rid: eng.requests[rid].state.value
+                  for rid in eng.requests}
+        eng.pool.scrub()
+        st = eng.pool.stats()
+        assert (st["blocks_live"] + st["blocks_evictable"]
+                + st["blocks_free"] == st["n_blocks"]), st
+        assert rep["pool"]["duplicate_copy_bytes"] == 0, rep["pool"]
+        return wall, rep, outs, states, eng.health()
+
+    base_wall, base_rep, base_outs, base_states, _ = one(None)
+    assert all(s == "finished" for s in base_states.values()), base_states
+    base_tok_s = base_rep["generated_tokens"] / base_wall
+
+    points = []
+    for preset in CHAOS_PRESETS:
+        wall, rep, outs, states, health = one(preset)
+        failed = sorted(r for r, s in states.items() if s == "failed")
+        innocents = [r for r in states if r not in failed]
+        # recovery contract: innocents are never lost and never perturbed
+        assert all(states[r] == "finished" for r in innocents), states
+        assert all(outs[r] == base_outs[r] for r in innocents), \
+            f"{preset}: innocent outputs diverged from fault-free twin"
+        if preset == "one-poison":
+            assert len(failed) == 1, states    # exactly the poisoned rid
+        else:
+            assert not failed, states          # zero loss
+        assert health["faults_fired"] > 0, health
+        good_tokens = sum(len(outs[r]) for r in innocents)
+        points.append({
+            "preset": preset,
+            "wall_s": wall,
+            "goodput_ratio": (good_tokens / wall) / base_tok_s,
+            "failed": failed,
+            "fault_ticks": health["fault_ticks"],
+            "tick_retries": health["tick_retries"],
+            "request_retries": health["request_retries"],
+            "isolated_innocents": health["isolated_innocents"],
+            "probes": health["probes"],
+            "recovered_tokens": health["recovered_tokens"],
+            "recomputed_tokens": health["recomputed_tokens"],
+            "faults_fired": health["faults_fired"],
+        })
+        common.row(f"serve_chaos_{preset}",
+                   wall * 1e6 / max(good_tokens, 1),
+                   f"goodput_ratio={points[-1]['goodput_ratio']:.2f} "
+                   f"failed={len(failed)}")
+
+    return {"fault_free_tok_per_s": base_tok_s, "wall_s": base_wall,
+            "seed": CHAOS_SEED, "sweep": points}
+
+
 def main(**kw) -> dict:
     payload = occupancy_sweep(**kw)
     payload["chunked_prefill"] = chunked_prefill(**kw)
     payload["spec_sweep"] = spec_sweep(**kw)
     payload["policy_sweep"] = policy_sweep(**kw)
+    payload["chaos_sweep"] = chaos_sweep(**kw)
     common.save("fig_serve", payload)
     return payload
 

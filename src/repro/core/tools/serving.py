@@ -40,7 +40,14 @@ deployment is judged on:
   * **preemption accounting**: ``serve.request.preempt`` events count
     evictions and blocks parked into the prefix store; resumed
     admissions report how many parked blocks aliased back with zero
-    recompute (``recovered_blocks``).
+    recompute (``recovered_blocks``),
+  * **health / fault accounting**: every ``serve.fault`` (transient tick
+    retries, blamed requests, bisection probes, isolated innocents),
+    ``serve.degrade`` (shed/restore ladder moves, degraded ticks),
+    ``serve.request.retry`` / ``.timeout`` / ``.failed`` / ``.reject``
+    terminal outcome, and the recovered-vs-recomputed token split on
+    resumed admissions — the report's ``health`` section accounts for
+    every fault-tolerance event the engine emitted.
 
 Attached to the engine's parent session it reports the fleet view; attached
 to a request's child session (``request_tools="serving"``) it reports that
@@ -110,6 +117,23 @@ class ServingTool(PastaTool):
         self.draft_s = 0.0
         self.params_bytes = 0
         self.kv_read_bytes = 0
+        # fault-tolerance accounting (serve.fault / serve.degrade / the
+        # terminal retry|timeout|failed|reject lifecycle events)
+        self.fault_events = 0
+        self.transient_faults = 0
+        self.blamed_requests = 0
+        self.isolated_innocents = 0
+        self.probes = 0
+        self.retry_events = 0
+        self.timeout_events = 0
+        self.failed_events = 0
+        self.reject_events = 0
+        self.degrade_shed = 0
+        self.degrade_restore = 0
+        self.degrade_level_max = 0
+        self.degraded_ticks = 0
+        self.recovered_tokens = 0
+        self.recomputed_tokens = 0
         self.timeline: list = []           # (time, phase, active)
         self._t0: float | None = None
 
@@ -146,6 +170,34 @@ class ServingTool(PastaTool):
                 rec = int(a.get("recovered_blocks", 0))
                 self.recovered_blocks += rec
                 e["recovered_blocks"] = e.get("recovered_blocks", 0) + rec
+                self.recovered_tokens += int(a.get("cached_tokens", 0))
+                self.recomputed_tokens += int(a.get("recomputed_tokens", 0))
+        elif name == "serve.request.retry":
+            e = self._entry(a["rid"])
+            e["retries"] = int(a.get("retries", 0))
+            self.retry_events += 1
+        elif name == "serve.request.timeout":
+            self._entry(a["rid"])["status"] = "timeout"
+            self.timeout_events += 1
+        elif name == "serve.request.failed":
+            self._entry(a["rid"])["status"] = "failed"
+            self.failed_events += 1
+        elif name == "serve.request.reject":
+            self._entry(a["rid"])["status"] = "rejected"
+            self.reject_events += 1
+        elif name == "serve.fault":
+            self.fault_events += 1
+            self.transient_faults += bool(a.get("transient", False))
+            self.blamed_requests += len(a.get("blamed", ()))
+            self.isolated_innocents += len(a.get("isolated", ()))
+            self.probes += int(a.get("probes", 0))
+        elif name == "serve.degrade":
+            if a.get("direction") == "shed":
+                self.degrade_shed += 1
+                self.degrade_level_max = max(self.degrade_level_max,
+                                             int(a.get("level", 0)))
+            else:
+                self.degrade_restore += 1
         elif name == "serve.request.preempt":
             e = self._entry(a["rid"])
             e["preempts"] = e.get("preempts", 0) + 1
@@ -185,6 +237,7 @@ class ServingTool(PastaTool):
                 self.timeline.append((ev.time - self._t0, "prefill",
                                       int(a.get("group", 1))))
         elif name == "serve.tick":
+            self.degraded_ticks += int(a.get("degrade_level", 0)) > 0
             self._close_tick()
 
     def on_operator_end(self, ev):
@@ -234,7 +287,11 @@ class ServingTool(PastaTool):
                    "drafted": e.get("drafted", 0),
                    "accepted": e.get("accepted", 0),
                    "tenant": tenant,
-                   "preempts": e.get("preempts", 0)}
+                   "preempts": e.get("preempts", 0),
+                   "retries": e.get("retries", 0),
+                   "status": e.get("status",
+                                   "finished" if "finish" in e
+                                   else "incomplete")}
             tn = tenants.setdefault(tenant, {
                 "requests": 0, "finished": 0, "generated_tokens": 0,
                 "good_tokens": 0, "slo_met": 0, "preempts": 0,
@@ -366,6 +423,23 @@ class ServingTool(PastaTool):
                 "parked_blocks": self.parked_blocks,
                 "resumed": self.resumed_admits,
                 "recovered_blocks": self.recovered_blocks,
+            },
+            "health": {
+                "fault_events": self.fault_events,
+                "transient_faults": self.transient_faults,
+                "blamed_requests": self.blamed_requests,
+                "isolated_innocents": self.isolated_innocents,
+                "probes": self.probes,
+                "retries": self.retry_events,
+                "timeouts": self.timeout_events,
+                "failed": self.failed_events,
+                "rejections": self.reject_events,
+                "degrade": {"shed_events": self.degrade_shed,
+                            "restore_events": self.degrade_restore,
+                            "level_max": self.degrade_level_max,
+                            "degraded_ticks": self.degraded_ticks},
+                "recovered_tokens": self.recovered_tokens,
+                "recomputed_tokens": self.recomputed_tokens,
             },
             "tenants": by_tenant,
             "by_request": per_request,

@@ -18,6 +18,20 @@ arrivals, per-tenant SLO tags), ``--policy`` picks the scheduling policy
 ``--trace-file in.jsonl`` replays one exactly (so two policies can be
 compared on the *same* arrivals).
 
+Chaos + fault tolerance: ``--chaos <preset> --chaos-seed N`` arms a
+deterministic :class:`repro.serve.faults.FaultPlan` (tick errors,
+poisoned requests, NaN logits, stalls, pool pressure, host preemptions);
+the engine recovers by blame-and-retry — only blamed requests end
+``failed``, innocents are re-queued losslessly.  ``--deadline-s`` stamps
+a hard per-request deadline onto every trace request's SLO (status
+``timeout`` on expiry).  The JSON summary gains the serving tool's
+``health`` section plus a top-level ``request_states`` map, so a chaos
+run's outcome is machine-checkable against its fault-free twin.
+
+``--compile-cache <dir>`` turns on the persistent XLA compilation cache
+(cold run compiles and populates; warm runs skip XLA) — ``compile_s`` in
+the JSON summary shows the cold-vs-warm difference.
+
 ``--json <path>`` writes the structured results (per-request + fleet
 reports, token throughput, latency/SLO/goodput summaries, trace seed and
 policy name) in the same one-dict-per-run contract as the dryrun driver.
@@ -97,6 +111,19 @@ def _parse():
     ap.add_argument("--save-trace", default=None, metavar="PATH",
                     help="write the materialized trace as JSONL for "
                          "exact replay")
+    ap.add_argument("--chaos", default=None,
+                    choices=("one-poison", "transient", "storm", "pressure"),
+                    help="arm a deterministic fault-injection preset "
+                         "(repro.serve.faults); recovery is asserted, not "
+                         "hoped for")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos preset's fault schedule")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="hard per-request deadline stamped onto every "
+                         "trace request's SLO (status 'timeout' on expiry)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(warm runs skip recompiles; see compile_s)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip pre-trace jit warmup (TTFT/TPOT will then "
                          "include compile time)")
@@ -150,11 +177,22 @@ def main():
     import jax
     import numpy as np
 
+    if args.compile_cache:
+        # persistent XLA compile cache: cold runs populate, warm runs skip
+        # XLA entirely (min thresholds zeroed so even the small reduced
+        # configs cache — the default 1s floor would skip them)
+        cache_dir = os.path.abspath(args.compile_cache)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+
+    import dataclasses
+
     import repro.configs as configs
     import repro.core as pasta
     from repro.dist.sharding import set_mesh
     from repro.models import init_params
-    from repro.serve import SamplingParams, ServeEngine, traffic
+    from repro.serve import SamplingParams, ServeEngine, SLOSpec, traffic
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -182,6 +220,15 @@ def main():
                            meta={"preset": args.traffic,
                                  "arch": args.arch})
         print(f"[serve] wrote trace {args.save_trace}")
+    if args.deadline_s is not None:
+        # stamp the hard deadline onto every request's SLO (engines cancel
+        # with status 'timeout' once it elapses)
+        trace = [dataclasses.replace(
+                     t, slo=(dataclasses.replace(t.slo,
+                                                 deadline_s=args.deadline_s)
+                             if t.slo is not None
+                             else SLOSpec(deadline_s=args.deadline_s)))
+                 for t in trace]
     if args.traffic or args.trace_file:
         max_seq = traffic.max_seq_for(trace)
     else:
@@ -207,7 +254,12 @@ def main():
                              draft_cfg=draft_cfg,
                              policy=args.policy,
                              interleave=args.interleave,
-                             rng_seed=args.seed)
+                             rng_seed=args.seed,
+                             faults=args.chaos, fault_seed=args.chaos_seed)
+        if args.chaos:
+            print(f"[serve] chaos armed: preset={args.chaos} "
+                  f"seed={args.chaos_seed} "
+                  f"({len(engine.faults.specs)} fault specs)")
         compile_s = 0.0
         if not args.no_warmup:
             # compile the steady-state dispatches BEFORE the trace clock
@@ -221,7 +273,7 @@ def main():
         pending = [(t.arrival_s, t) for t in trace]
         rids = []
         outputs = {}            # collected at retirement (pruning-safe)
-        while pending or engine.sched.has_work:
+        while pending or engine.has_work:
             now = time.perf_counter() - t0
             while pending and pending[0][0] <= now:
                 t = pending.pop(0)[1]
@@ -230,7 +282,7 @@ def main():
                     SamplingParams(max_new_tokens=t.max_new_tokens,
                                    temperature=args.temperature),
                     slo=t.slo))
-            if engine.sched.has_work:
+            if engine.has_work:
                 for rid in engine.step()["finished"]:
                     outputs[rid] = list(engine.requests[rid].tokens)
             elif pending:
@@ -252,7 +304,19 @@ def main():
                   f"({args.draft}): {engine.accepted_tokens}/"
                   f"{engine.drafted_tokens} drafts accepted "
                   f"({acc:.2f}), {engine.decode_steps} verify ticks")
-        print(f"[serve] sample: {outputs[rids[0]][:12]}")
+        health = engine.health()
+        if args.chaos or args.deadline_s is not None:
+            print(f"[serve] health: faults={health['fault_ticks']} "
+                  f"retries={health['request_retries']} "
+                  f"failed={health['failed']} "
+                  f"timeouts={health['timeouts']} "
+                  f"isolated={health['isolated_innocents']} "
+                  f"degraded_ticks={health['degraded_ticks']}")
+        done_rids = [r for r in rids if r in outputs]
+        if done_rids:
+            print(f"[serve] sample: {outputs[done_rids[0]][:12]}")
+        else:
+            print("[serve] sample: <no finished requests>")
         try:
             # fleet kernel_freq etc. see the fused decode step's compiled HLO
             import jax.numpy as jnp
@@ -317,6 +381,10 @@ def main():
                 "traffic": args.traffic,
                 "trace_file": args.trace_file,
                 "trace_seed": trace_meta.get("seed", args.seed),
+                "chaos": args.chaos,
+                "chaos_seed": args.chaos_seed,
+                "deadline_s": args.deadline_s,
+                "compile_cache": args.compile_cache,
             },
             "summary": {
                 "wall_s": dt,
@@ -341,11 +409,17 @@ def main():
                 "slo": serving.get("slo"),
                 "preemption": serving.get("preemption"),
                 "tenants": serving.get("tenants"),
+                "health": serving.get("health"),
+                "engine_health": health,
+                "faults": (engine.faults.to_dict()
+                           if engine.faults is not None else None),
             },
             "fleet": {name: rep.data for name, rep in reports.items()},
             "requests": per_request,
             "tokens": {int(rid): [int(t) for t in toks]
                        for rid, toks in outputs.items()},
+            "request_states": {int(rid): engine.requests[rid].state.value
+                               for rid in rids if rid in engine.requests},
         }
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1, default=str)

@@ -11,6 +11,7 @@ parsed and applied to XLA_FLAGS *before* jax is imported.
 import argparse
 import os
 import sys
+import time
 
 
 def _parse():
@@ -45,6 +46,9 @@ def _parse():
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--data", default="", help="token .bin file (synthetic "
                                                "if empty)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory — "
+                         "warm restarts skip the train-step recompile")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args()
 
@@ -57,6 +61,15 @@ def main():
 
     import jax
     import numpy as np
+
+    if args.compile_cache:
+        # persistent XLA compile cache: a restarted run (same config, same
+        # mesh) skips the train-step compile entirely — min thresholds
+        # zeroed so the small reduced configs cache too
+        cache_dir = os.path.abspath(args.compile_cache)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
 
     import repro.configs as configs
     import repro.core as pasta
@@ -136,8 +149,11 @@ def main():
                                                metrics_cb)
 
         # post-run: capture the compiled artifact into the event stream
+        # (timed: with --compile-cache this is the warm-vs-cold signal)
         example = place_batch(source.batch_at(0))
+        t_c = time.perf_counter()
         compiled = jitted.lower(params, opt_state, example).compile()
+        compile_s = time.perf_counter() - t_c
         session.capture_compiled(compiled, label="train_step",
                                  default_trip=cfg.n_layers,
                                  steps=step - start)
@@ -149,6 +165,9 @@ def main():
         print(f"  {name}: {short}")
     if loop.stragglers:
         print(f"[train] straggler steps detected: {loop.stragglers}")
+    cached = " (compile cache: " + args.compile_cache + ")" \
+        if args.compile_cache else ""
+    print(f"[train] train_step compile_s={compile_s:.3f}{cached}")
     print(f"[train] done at step {step}; restarts={loop.restarts}")
     return 0
 

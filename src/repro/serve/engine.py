@@ -69,11 +69,33 @@ in, while the parent session aggregates the fleet view (the registered
 ``serving`` tool turns those events into TTFT/TPOT, occupancy timeline,
 prefix-hit-rate, block-pool-utilization and chunk-stall reports).
 
+**Fault tolerance** is blame-and-retry, not abort-everything.  A seeded
+:class:`~repro.serve.faults.FaultPlan` (``faults=``) injects deterministic
+chaos — tick exceptions, poisoned requests, NaN logits, stalls, pool
+pressure, host-preemption signals — and the recovery layer turns a failed
+tick into surgical cleanup: non-finite logits rows blame their request
+directly, attributable tick exceptions are *bisected* over the live set
+(``FaultPlan.probe``) to find the culprit(s), and every innocent runner is
+losslessly re-queued by parking its committed KV blocks in the prefix
+store exactly like a policy preemption (zero bytes copied, byte-identical
+resumed output).  Blamed requests retry up to ``max_request_retries``
+times behind a capped exponential backoff (their KV is recomputed, their
+tokens are position-keyed so the output still cannot change) and then end
+with status ``failed``.  ``SLOSpec.deadline_s`` is enforced every tick
+(status ``timeout``, slot + blocks + owed reservation released, child
+session closed).  Under sustained pool pressure or repeated slow ticks
+the engine sheds load in declared order — speculative decode off, prefill
+chunk budget halved, new admissions ``rejected`` — and restores each knob
+as pressure clears.  ``health()`` accounts for every fault, retry,
+timeout and degradation event; the session sees ``serve.fault`` /
+``serve.degrade`` / ``serve.request.retry|timeout|failed|reject`` events.
+
 ``generate(prompts)`` survives as a deprecated shim over ``submit``/``run``
 with the legacy observability contract (one child session per *call*).
 ``abort(rid)`` cancels a request at any lifecycle stage, releasing its slot,
-its pool blocks and its child session; ``run``/``stream``/``generate`` abort
-all live requests if a tick raises, so a mid-drain failure cannot leak KV
+its pool blocks and its child session; ``run``/``stream``/``generate`` keep
+abort-all as the backstop for *unattributable* exceptions (anything the
+recovery layer does not own), so a mid-drain failure still cannot leak KV
 slots or leave sessions open forever.
 """
 
@@ -96,6 +118,7 @@ from repro.models.config import ModelConfig
 from .cache import (KVSlotPool, PagedKVPool, PrefixCache, bucket,
                     pad_cache_to)
 from .draft import DraftModelProposer, NgramProposer
+from .faults import FaultInjected, get_plan
 from .scheduler import (Request, RequestState, SamplingParams, Scheduler,
                         pad_group)
 from .slo import get_policy
@@ -110,6 +133,16 @@ _pad_cache_to = pad_cache_to
 #: alone at exact length.  vlm/audio would qualify if tokenized, but their
 #: configs are embedding-frontend stubs with no autoregressive token loop.
 _KV_ONLY = ("dense",)
+
+#: lifecycle states no transition leaves — abort/cancel paths are
+#: idempotent against all of them
+_TERMINAL = frozenset((RequestState.FINISHED, RequestState.ABORTED,
+                       RequestState.FAILED, RequestState.TIMEOUT,
+                       RequestState.REJECTED))
+
+#: degradation ladder: level -> the knob that level sheds
+_DEGRADE_KNOBS = {1: "spec_decode_off", 2: "prefill_chunk_halved",
+                  3: "reject_admissions"}
 
 
 class ServeEngine:
@@ -126,7 +159,13 @@ class ServeEngine:
                  prefill_chunk: int | None = None,
                  spec_decode: int = 0, draft="ngram",
                  draft_cfg: ModelConfig | None = None, draft_params=None,
-                 policy=None, interleave: str = "chunked"):
+                 policy=None, interleave: str = "chunked",
+                 faults=None, fault_seed: int = 0,
+                 max_request_retries: int = 2,
+                 retry_backoff_s: float = 0.05,
+                 retry_backoff_cap_s: float = 0.5,
+                 degrade: bool | None = None,
+                 slow_tick_s: float = 0.05):
         """``max_slots``: concurrent requests the KV pool holds; waiting
         requests queue FCFS.  ``session``: parent Session for per-request
         child sessions (innermost active session when omitted).
@@ -157,7 +196,17 @@ class ServeEngine:
         prefill/decode arbitration per tick — ``"chunked"`` (default)
         spends the FCFS ``prefill_chunk`` budget every tick;
         ``"decode"`` defers ALL mid-prefill chunk work on ticks where any
-        slot can decode (decode-priority; requires ``prefill_chunk``)."""
+        slot can decode (decode-priority; requires ``prefill_chunk``).
+        ``faults``: a :class:`~repro.serve.faults.FaultPlan`, a preset name,
+        or ``None`` — deterministic chaos injected into the tick loop
+        (paged mode only: recovery parks KV via the prefix store).
+        ``max_request_retries``/``retry_backoff_s``/``retry_backoff_cap_s``:
+        blamed requests are re-queued (full recompute, byte-identical
+        output) up to this many times behind a capped exponential backoff,
+        then end ``failed``.  ``degrade``: enable the load-shedding ladder
+        (``None`` = auto: on only when a fault plan is present, so plain
+        engines never shed on compile spikes); ``slow_tick_s``: absolute
+        floor for slow-tick detection."""
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "ServeEngine decodes token ids; embedding-frontend archs "
@@ -185,6 +234,36 @@ class ServeEngine:
         self.policy = get_policy(policy)
         self.sched = Scheduler(max_slots, policy=self.policy)
 
+        # ---- fault tolerance: chaos plan, retry pen, degradation ladder
+        self.faults = get_plan(faults, seed=fault_seed)
+        self.max_request_retries = int(max_request_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.retry_backoff_cap_s = float(retry_backoff_cap_s)
+        self.degrade_enabled = ((self.faults is not None) if degrade is None
+                                else bool(degrade))
+        self.slow_tick_s = float(slow_tick_s)
+        self.ticks = 0
+        self.degrade_level = 0
+        self.degraded_ticks = 0
+        self.fault_ticks = 0
+        self.tick_retries = 0
+        self.request_retries = 0
+        self.failed_requests = 0
+        self.timeouts = 0
+        self.rejections = 0
+        self.isolated_innocents = 0
+        self.fault_probes = 0
+        self.host_preempt_signals = 0
+        self.recomputed_tokens = 0
+        #: blamed-but-retryable requests serving their backoff; NOT in the
+        #: scheduler's waiting queue, so they cannot head-of-line block
+        self._backoff: list = []
+        self._tick_durs: collections.deque = collections.deque(maxlen=32)
+        self._slow_streak = 0
+        self._calm_streak = 0
+        self._admission_blocked = False
+        self._fault_streak = 0
+
         self.paged = (cfg.family in _KV_ONLY) if paged is None else paged
         if self.paged and cfg.family not in _KV_ONLY:
             raise ValueError(
@@ -192,6 +271,11 @@ class ServeEngine:
                 f"{cfg.family!r} (SSM/hybrid state is not block-addressable)")
         if prefill_chunk is not None and not self.paged:
             raise ValueError("prefill_chunk requires the paged KV pool")
+        if self.faults is not None and not self.paged:
+            raise ValueError(
+                "fault injection requires the paged KV pool: recovery "
+                "parks innocent requests' KV in the prefix store, which "
+                "non-paged recurrent state cannot re-alias")
         self.block_size = block_size if block_size is not None else \
             (prefix_block if self.paged else 16)
         if self.paged:
@@ -465,6 +549,27 @@ class ServeEngine:
         rid = next(self._req_ids)
         req = Request(rid=rid, prompt=prompt, params=params, slo=slo,
                       submit_time=time.perf_counter())
+        attrs = {}
+        if slo is not None:
+            attrs = {"tenant": slo.tenant, "priority": slo.priority,
+                     "ttft_target_s": slo.ttft_target_s,
+                     "tpot_target_s": slo.tpot_target_s}
+        if self.degrade_enabled and self.degrade_level >= 3:
+            # shedding level 3: fail fast at the door — no child session,
+            # no queue slot; callers see terminal status "rejected"
+            req.state = RequestState.REJECTED
+            self.requests[rid] = req
+            self.rejections += 1
+            self._req_handler(req).operator_start(
+                "serve.request.submit", rid=rid, prompt_len=req.prompt_len,
+                max_new_tokens=params.max_new_tokens, **attrs)
+            self._req_handler(req).operator_start(
+                "serve.request.reject", rid=rid,
+                degrade_level=self.degrade_level)
+            self._retired.append(rid)
+            while len(self._retired) > self.max_retained_requests:
+                self.requests.pop(self._retired.popleft(), None)
+            return rid
         if self._per_request_sessions and self._handler is None:
             parent = self.session or pasta.current_session()
             req.session = parent.child(
@@ -472,11 +577,6 @@ class ServeEngine:
                 name=f"{parent.name}/request{rid}")
         self.requests[rid] = req
         self.sched.submit(req)
-        attrs = {}
-        if slo is not None:
-            attrs = {"tenant": slo.tenant, "priority": slo.priority,
-                     "ttft_target_s": slo.ttft_target_s,
-                     "tpot_target_s": slo.tpot_target_s}
         self._req_handler(req).operator_start(
             "serve.request.submit", rid=rid, prompt_len=req.prompt_len,
             max_new_tokens=params.max_new_tokens, **attrs)
@@ -504,7 +604,13 @@ class ServeEngine:
         exactly the blocks taken, so ``available() >= sum(owed)`` is an
         invariant."""
         need = self._horizon_blocks(req)
-        if self.pool.available() - sum(self._owed.values()) < need:
+        avail = self.pool.available() - sum(self._owed.values())
+        if self.faults is not None:
+            # injected pool pressure: blocks withheld from admission (never
+            # from already-admitted draws, so the owed invariant holds)
+            avail -= self.faults.held_blocks(self.ticks)
+        if avail < need:
+            self._admission_blocked = True
             return False
         self._owed[req.rid] = need
         return True
@@ -537,13 +643,78 @@ class ServeEngine:
         if grew:
             self._owed[req.rid] = max(self._owed.get(req.rid, 0) - grew, 0)
 
+    @property
+    def has_work(self) -> bool:
+        """Live work anywhere: the scheduler's queue and slots, plus blamed
+        requests serving their retry backoff in the engine's pen."""
+        return self.sched.has_work or bool(self._backoff)
+
     def step(self) -> dict:
         """One scheduler tick: preempt victims the policy names, reorder +
         admit+prefill into free slots (at most one chunk's worth of prefill
         tokens across all mid-prefill requests), one fused decode over all
         fully-prefilled slots, retire finished requests.  Returns
         ``{"admitted","finished","new_tokens","active","queued","working"}``.
+
+        The fault-tolerance envelope lives here: deadlines are enforced and
+        expired retry backoffs re-admitted first; injected stalls /
+        pool-pressure / host-preemption signals are applied; an injected
+        tick exception is caught and recovered (blame bisection, retry or
+        fail the culprits, park every innocent runner losslessly); and the
+        degradation ladder updates from the tick's pressure signals.
         """
+        self.ticks += 1
+        t0 = time.perf_counter()
+        self._admission_blocked = False
+        self._enforce_deadlines(t0)
+        self._readmit_backoff(t0)
+        if self.faults is not None:
+            stall = self.faults.tick_stall_s(self.ticks)
+            if stall > 0:
+                time.sleep(stall)
+            for _ in range(self.faults.preempt_signals(self.ticks)):
+                running = sorted(self.sched.running.values(),
+                                 key=lambda r: r.rid)
+                if not running:
+                    break
+                # the host wants a slot back — evict the newest runner
+                # (least sunk work), parked losslessly like any victim
+                self.host_preempt_signals += 1
+                self._preempt(running[-1], reason="host")
+        out: dict = {"admitted": [], "finished": [], "new_tokens": []}
+        try:
+            self._step_inner(out)
+            self._fault_streak = 0
+        except FaultInjected as exc:
+            self._fault_streak += 1
+            if self._fault_streak > 12:
+                # unrecoverable storm: every recent tick died — fall back
+                # to the callers' abort-all backstop instead of spinning
+                raise
+            self._recover(exc, out)
+        self._update_degradation(time.perf_counter() - t0)
+        # tick boundary marker: lets per-tick reductions (prefill-stall
+        # accounting in the serving tool) close their window even on ticks
+        # with no decodable slot — or on an abandoned faulty tick
+        self.handler.operator_start("serve.tick", active=self.sched.n_active,
+                                    queued=self.sched.n_queued,
+                                    degrade_level=self.degrade_level)
+        if not self.sched.has_work and self._backoff:
+            # nothing runnable until a backoff expires: yield briefly so
+            # run()/stream() drain loops don't spin the host CPU
+            wake = min(r.retry_at for r in self._backoff)
+            time.sleep(min(max(wake - time.perf_counter(), 0.0), 0.02))
+        out["active"] = self.sched.n_active
+        out["queued"] = self.sched.n_queued
+        out["working"] = self.has_work
+        return out
+
+    def _step_inner(self, out: dict) -> None:
+        """The actual tick work; ``out`` accumulates what committed, so an
+        abandoned tick still reports the tokens it landed before the
+        fault."""
+        new_tokens: list = out["new_tokens"]
+        finished: list = out["finished"]
         if self.policy is not None:
             now = time.perf_counter()
             if self.policy.preemptive and self.paged and self.sched.waiting:
@@ -553,15 +724,14 @@ class ServeEngine:
                     self._preempt(victim)
             self.sched.reorder(now)
         admitted = self.sched.admit(fits=self._fits if self.paged else None)
-        new_tokens: list = []
-        finished: list = []
+        out["admitted"] = [r.rid for r in admitted]
         cold_group: list = []
         for req in admitted:
             # a resumed admission must re-materialize prompt + committed
             # tokens — lookups/prefill run over the CONTEXT, so the parked
             # blocks alias straight back (fresh request: context == prompt)
             ctx = req.context
-            resumed = req.preemptions > 0
+            resumed = req.preemptions > 0 or req.retries > 0
             req.prefill_len = req.context_len
             hit_len, entry = 0, None
             if self.prefix_cache is not None:
@@ -573,14 +743,17 @@ class ServeEngine:
             req.prefix_kv = entry
             recovered = hit_len // self.block_size \
                 if resumed and self.paged else 0
+            recomputed = (req.prefill_len - hit_len) if resumed else 0
             if resumed:
                 self.recovered_tokens += hit_len
                 self.recovered_blocks += recovered
+                self.recomputed_tokens += recomputed
             self._req_handler(req).operator_start(
                 "serve.request.admit", rid=req.rid, slot=req.slot,
                 prompt_len=req.prefill_len, cached_tokens=hit_len,
                 queue_s=req.admit_time - req.submit_time,
-                resumed=resumed, recovered_blocks=recovered)
+                resumed=resumed, recovered_blocks=recovered,
+                recomputed_tokens=recomputed)
             if self.paged:
                 self._bind_paged(req, hit_len, entry)
                 req.prefix_kv = None
@@ -603,6 +776,10 @@ class ServeEngine:
         # decode: chunk work only runs on decode-idle ticks (max_new_tokens
         # bounds every decode tail, so deferral is starvation-free)
         budget = self.prefill_chunk
+        if budget is not None and self.degrade_level >= 2:
+            # shedding level 2: halve the per-tick prefill budget (floor
+            # one block) — decode latency wins over admission ramp
+            budget = max(self.block_size, budget // 2)
         if self.interleave == "decode" and self._prefilling \
                 and self._decode_actives():
             budget = 0
@@ -613,9 +790,10 @@ class ServeEngine:
                                              budget)
             if budget is not None:
                 budget -= budget_used
-        if self.spec_k:
+        if self.spec_k and self.degrade_level < 1:
             self._spec_decode_step(new_tokens, finished)
         else:
+            # shedding level 1 parks speculation: plain one-token decode
             self._decode_step(new_tokens, finished)
         if self.policy is not None and new_tokens:
             # committed-token feedback (fair-share weights, etc.)
@@ -623,19 +801,6 @@ class ServeEngine:
                 r = self.requests.get(rid)
                 if r is not None:
                     self.policy.note_tokens(r)
-        # tick boundary marker: lets per-tick reductions (prefill-stall
-        # accounting in the serving tool) close their window even on ticks
-        # with no decodable slot
-        self.handler.operator_start("serve.tick", active=self.sched.n_active,
-                                    queued=self.sched.n_queued)
-        return {
-            "admitted": [r.rid for r in admitted],
-            "finished": finished,
-            "new_tokens": new_tokens,
-            "active": self.sched.n_active,
-            "queued": self.sched.n_queued,
-            "working": self.sched.has_work,
-        }
 
     # -------------------------------------------------------------- prefill
     def _publish(self, req: Request) -> None:
@@ -682,6 +847,10 @@ class ServeEngine:
         """Prefill one admission unit: a right-padded cold group (KV-only
         families) or a single request (legacy prefix hit / SSM / hybrid /
         MoE)."""
+        if self.faults is not None:
+            # before the event span opens and before any device dispatch:
+            # an abandoned tick leaves balanced events and untouched state
+            self.faults.check_tick(self.ticks, [r.rid for r in reqs])
         hit = len(reqs) == 1 and reqs[0].cached_tokens > 0
         self.handler.operator_start(
             "serve.prefill",
@@ -742,6 +911,8 @@ class ServeEngine:
         table (per-query causal masking keeps multi-token appends exact)
         and, on the final chunk, sample the first token and publish the
         prompt's blocks.  Returns the tokens prefilled."""
+        if self.faults is not None:
+            self.faults.check_tick(self.ticks, [req.rid])
         remaining = req.prefill_len - req.progress
         chunk = remaining if budget is None else min(budget, remaining)
         span = self.pool.blocks_per_seq * self.pool.block_size
@@ -811,6 +982,9 @@ class ServeEngine:
         active = self._decode_actives()
         if not active:
             return
+        if self.faults is not None:
+            self.faults.check_tick(self.ticks,
+                                   [r.rid for r in active.values()])
         self.decode_steps += 1
         self.handler.operator_start(
             "serve.decode", step=self.decode_steps, active=len(active),
@@ -836,6 +1010,9 @@ class ServeEngine:
                 self.params, self.pool.cache,
                 jnp.asarray(self.last_tokens[:, None]))
         logits = np.asarray(logits)
+        logits, bad = self._blame_nonfinite(active, logits)
+        for slot in bad:
+            del active[slot]                    # blamed rows sample nothing
         for slot, req in active.items():
             tok = self._sample_one(req, logits[slot])
             req.tokens.append(tok)
@@ -868,6 +1045,9 @@ class ServeEngine:
         active = self._decode_actives()
         if not active:
             return
+        if self.faults is not None:
+            self.faults.check_tick(self.ticks,
+                                   [r.rid for r in active.values()])
         k = self.spec_k
         t_draft = time.perf_counter()
         drafts = self.proposer.propose(
@@ -912,8 +1092,14 @@ class ServeEngine:
                                                    jnp.asarray(toks),
                                                    self._verify_idx_dev)
         logits = np.asarray(logits)
+        pairs = list(zip(list(active.items()), drafts))
+        logits, bad = self._blame_nonfinite(active, logits)
+        for slot in bad:
+            del active[slot]                    # blamed rows commit nothing
         accepted = committed = 0
-        for (slot, req), d in zip(list(active.items()), drafts):
+        for (slot, req), d in pairs:
+            if slot not in active:
+                continue
             len0 = len(req.tokens)
             s = 0
             while True:
@@ -995,7 +1181,7 @@ class ServeEngine:
         self._preempt(req)
         return True
 
-    def _preempt(self, req: Request) -> None:
+    def _preempt(self, req: Request, reason: str = "policy") -> None:
         # cached KV covers `progress` positions mid-prefill; once decoding,
         # it covers context_len - 1 (the newest sampled token is pending in
         # last_tokens — its KV is written by the NEXT decode dispatch)
@@ -1014,12 +1200,42 @@ class ServeEngine:
         self.parked_blocks += parked
         self._req_handler(req).operator_start(
             "serve.request.preempt", rid=req.rid, slot=req.slot,
-            n_tokens=len(req.tokens), kv_len=kv_len, parked_blocks=parked)
+            n_tokens=len(req.tokens), kv_len=kv_len, parked_blocks=parked,
+            reason=reason)
         req.progress = 0
         req.cached_tokens = 0
         req.prefill_len = None
         req.prefix_kv = None
         self.sched.preempt(req)
+
+    def _cancel(self, req: Request, state: RequestState, event: str,
+                **attrs) -> None:
+        """Shared terminal-cancellation path (abort / timeout / fail):
+        release queue position or slot (and, paged, pool blocks), clear the
+        owed reservation, emit the terminal event, close the child session,
+        enter retirement bookkeeping.  Callers guarantee the request is
+        live (queued, running, or in the retry-backoff pen)."""
+        if req in self._backoff:
+            self._backoff.remove(req)
+            req.state = state
+        elif req.state is RequestState.QUEUED:
+            self.sched.remove_waiting(req, state=state)
+        else:                                   # RUNNING: holds a slot
+            if self.paged:
+                self.pool.free_slot(req.slot)
+            if req in self._prefilling:
+                self._prefilling.remove(req)
+            self.sched.release(req, state=state)
+        self._owed.pop(req.rid, None)
+        self._req_handler(req).operator_start(
+            event, rid=req.rid, n_tokens=len(req.tokens), **attrs)
+        if req.session is not None:
+            req.session.close()
+            req.session = None
+        req.prefix_kv = None
+        self._retired.append(req.rid)
+        while len(self._retired) > self.max_retained_requests:
+            self.requests.pop(self._retired.popleft(), None)
 
     def abort(self, rid: int) -> bool:
         """Cancel a request at any lifecycle stage: drop it from the queue
@@ -1028,49 +1244,251 @@ class ServeEngine:
         requests.  This is the error-path cleanup ``run``/``stream``/
         ``generate`` invoke when a tick raises mid-drain."""
         req = self.requests.get(rid)
-        if req is None or req.state in (RequestState.FINISHED,
-                                        RequestState.ABORTED):
+        if req is None or req.state in _TERMINAL:
             return False
-        if req.state is RequestState.QUEUED:
-            self.sched.remove_waiting(req)
-        else:                                   # RUNNING: holds a slot
+        self._cancel(req, RequestState.ABORTED, "serve.request.abort")
+        return True
+
+    def abort_all(self) -> int:
+        """Abort every queued, running, and backoff request; returns the
+        count."""
+        live = [r.rid for r in list(self.sched.waiting)
+                + list(self.sched.running.values()) + list(self._backoff)]
+        return sum(self.abort(rid) for rid in live)
+
+    # ------------------------------------------------------ fault recovery
+    def _enforce_deadlines(self, now: float) -> None:
+        """Expire every live request whose ``SLOSpec.deadline_s`` has
+        elapsed since submission: status ``timeout``, slot + blocks + owed
+        reservation released, child session closed."""
+        live = list(self.sched.waiting) + list(self.sched.running.values()) \
+            + list(self._backoff)
+        for req in live:
+            deadline = getattr(req.slo, "deadline_s", None) \
+                if req.slo is not None else None
+            if deadline is None:
+                continue
+            elapsed = now - req.submit_time
+            if elapsed > deadline:
+                self.timeouts += 1
+                self._cancel(req, RequestState.TIMEOUT,
+                             "serve.request.timeout", deadline_s=deadline,
+                             elapsed_s=elapsed)
+
+    def _readmit_backoff(self, now: float) -> None:
+        """Move blamed requests whose backoff expired back to the FRONT of
+        the waiting queue (they already waited their turn once)."""
+        for req in list(self._backoff):
+            if req.retry_at <= now:
+                self._backoff.remove(req)
+                self.sched.waiting.appendleft(req)
+
+    def _retry_requeue(self, req: Request, now: float) -> None:
+        """Blamed but retryable: drop the slot and every cached byte of
+        work (the fault makes its KV suspect — unlike preemption, nothing
+        is parked) and hold the request in the backoff pen.  Committed
+        tokens are kept: position-keyed sampling makes the recomputed
+        continuation byte-identical, so a retry can change latency but
+        never output."""
+        self.request_retries += 1
+        if req.state is RequestState.RUNNING:
             if self.paged:
                 self.pool.free_slot(req.slot)
             if req in self._prefilling:
                 self._prefilling.remove(req)
-            self.sched.release(req, state=RequestState.ABORTED)
-        self._owed.pop(rid, None)
-        self._req_handler(req).operator_start(
-            "serve.request.abort", rid=rid, n_tokens=len(req.tokens))
-        if req.session is not None:
-            req.session.close()
-            req.session = None
+            self.sched.vacate(req)
+        self._owed.pop(req.rid, None)
+        req.progress = 0
+        req.cached_tokens = 0
+        req.prefill_len = None
         req.prefix_kv = None
-        self._retired.append(rid)
-        while len(self._retired) > self.max_retained_requests:
-            self.requests.pop(self._retired.popleft(), None)
-        return True
+        backoff = min(self.retry_backoff_s * (2 ** (req.retries - 1)),
+                      self.retry_backoff_cap_s)
+        req.retry_at = now + backoff
+        self._backoff.append(req)
+        self._req_handler(req).operator_start(
+            "serve.request.retry", rid=req.rid, retries=req.retries,
+            backoff_s=backoff, n_tokens=len(req.tokens))
 
-    def abort_all(self) -> int:
-        """Abort every queued and running request; returns the count."""
-        live = [r.rid for r in list(self.sched.waiting)
-                + list(self.sched.running.values())]
-        return sum(self.abort(rid) for rid in live)
+    def _fail(self, req: Request, reason: str) -> None:
+        """Retries exhausted (or unretryable): terminal ``failed``."""
+        self.failed_requests += 1
+        self._cancel(req, RequestState.FAILED, "serve.request.failed",
+                     reason=reason, retries=req.retries)
+
+    def _blame(self, blamed: list, kind: str, probes: int = 0,
+               isolate: bool = False) -> None:
+        """Fault attribution resolved: each blamed request retries (bounded,
+        backed off) or fails; with ``isolate`` every innocent runner is
+        parked losslessly first — exactly the preemption path, so resumed
+        outputs stay byte-identical and zero bytes are copied."""
+        self.fault_ticks += 1
+        now = time.perf_counter()
+        blamed_rids = tuple(r.rid for r in blamed)
+        retried, failed = [], []
+        for req in blamed:
+            req.retries += 1
+            if req.retries > self.max_request_retries:
+                self._fail(req, reason=kind)
+                failed.append(req.rid)
+            else:
+                self._retry_requeue(req, now)
+                retried.append(req.rid)
+        isolated = []
+        if isolate:
+            for req in sorted(self.sched.running.values(),
+                              key=lambda r: r.rid):
+                isolated.append(req.rid)
+                self._preempt(req, reason="fault")
+            self.isolated_innocents += len(isolated)
+        self.handler.operator_start(
+            "serve.fault", tick=self.ticks, kind=kind, transient=False,
+            blamed=blamed_rids, probes=probes, retried=tuple(retried),
+            failed=tuple(failed), isolated=tuple(isolated))
+
+    def _blame_nonfinite(self, active: dict, logits) -> list:
+        """Row-attributable blame after a fused forward: inject armed NaN
+        faults, then scan every active row for non-finite logits (injected
+        or a genuine numeric blowup).  Blamed requests retry or fail on the
+        spot; innocents keep the tick — no bisection, no tick abandonment.
+        Returns ``(logits, blamed slots)`` — the caller drops blamed slots
+        from the commit loop (logits may be a writable copy: np views of
+        device arrays are read-only, and injection overwrites rows)."""
+        if self.faults is not None:
+            if not logits.flags.writeable:
+                logits = logits.copy()
+            self.faults.corrupt_logits(
+                self.ticks,
+                {req.rid: slot for slot, req in active.items()}, logits)
+        bad = [slot for slot, req in active.items()
+               if not np.isfinite(logits[slot]).all()]
+        if bad:
+            self._blame([active[s] for s in bad], kind="nan_logits",
+                        isolate=False)
+        return logits, bad
+
+    def _bisect(self, cands: list) -> tuple:
+        """Find the poisoned request(s) among ``cands`` by recursive
+        halving against the plan's non-consuming :meth:`FaultPlan.probe`
+        oracle — O(b log n) probes for b culprits instead of n replays."""
+        bad: list = []
+        probes = 0
+        stack = [list(cands)]
+        while stack:
+            group = stack.pop()
+            if not group:
+                continue
+            probes += 1
+            if not self.faults.probe([r.rid for r in group]):
+                continue
+            if len(group) == 1:
+                bad.append(group[0])
+                continue
+            mid = len(group) // 2
+            stack.extend([group[mid:], group[:mid]])
+        self.fault_probes += probes
+        return sorted(bad, key=lambda r: r.rid), probes
+
+    def _recover(self, exc: FaultInjected, out: dict) -> None:
+        """An injected exception abandoned the tick.  Device state is safe
+        to abandon: faults fire before the fused dispatch, and every KV
+        write position derives from host-tracked lengths, so a resumed or
+        retried dispatch overwrites the same positions identically.
+        Attributable faults are blame-bisected (culprits retry or fail,
+        innocents park losslessly); transient ones just retry the tick."""
+        blamed: list = []
+        probes = 0
+        if exc.attributable:
+            blamed, probes = self._bisect(
+                sorted(self.sched.running.values(), key=lambda r: r.rid))
+        if blamed:
+            self._blame(blamed, exc.kind, probes=probes, isolate=True)
+        else:
+            self.fault_ticks += 1
+            self.tick_retries += 1
+            self.handler.operator_start(
+                "serve.fault", tick=self.ticks, kind=exc.kind,
+                transient=True, blamed=(), probes=probes, retried=(),
+                failed=(), isolated=())
+
+    def _update_degradation(self, tick_s: float) -> None:
+        """Load-shedding ladder: on pool pressure (admission blocked with
+        work queued) or a slow-tick streak (3x the rolling median, floored
+        at ``slow_tick_s``), shed one level per pressured tick — spec
+        decode off, prefill chunk halved, admissions rejected — and
+        restore one level per 4 consecutive calm ticks."""
+        self._tick_durs.append(tick_s)
+        if not self.degrade_enabled:
+            return
+        slow = False
+        if len(self._tick_durs) >= 5:
+            med = float(np.median(self._tick_durs))
+            slow = tick_s > max(self.slow_tick_s, 3.0 * med)
+        self._slow_streak = self._slow_streak + 1 if slow else 0
+        pooled = self._admission_blocked and bool(self.sched.waiting)
+        pressure = pooled or self._slow_streak >= 2
+        if pressure:
+            self._calm_streak = 0
+            if self.degrade_level < 3:
+                self.degrade_level += 1
+                self.handler.operator_start(
+                    "serve.degrade", level=self.degrade_level,
+                    direction="shed",
+                    reason="pool_pressure" if pooled else "slow_ticks",
+                    knob=_DEGRADE_KNOBS[self.degrade_level])
+        else:
+            self._calm_streak += 1
+            if self.degrade_level > 0 and self._calm_streak >= 4:
+                restored = self.degrade_level
+                self.degrade_level -= 1
+                self._calm_streak = 0
+                self.handler.operator_start(
+                    "serve.degrade", level=self.degrade_level,
+                    direction="restore", reason="pressure_cleared",
+                    knob=_DEGRADE_KNOBS[restored])
+        if self.degrade_level:
+            self.degraded_ticks += 1
+
+    def health(self) -> dict:
+        """Fault-tolerance counters for the engine's lifetime: every fault,
+        retry, timeout, rejection, and degradation event is accounted for
+        here (and mirrored in the ``serving`` tool's ``health`` section)."""
+        return {
+            "ticks": self.ticks,
+            "fault_ticks": self.fault_ticks,
+            "tick_retries": self.tick_retries,
+            "request_retries": self.request_retries,
+            "failed": self.failed_requests,
+            "timeouts": self.timeouts,
+            "rejections": self.rejections,
+            "isolated_innocents": self.isolated_innocents,
+            "probes": self.fault_probes,
+            "host_preempt_signals": self.host_preempt_signals,
+            "degrade_level": self.degrade_level,
+            "degraded_ticks": self.degraded_ticks,
+            "recovered_tokens": self.recovered_tokens,
+            "recomputed_tokens": self.recomputed_tokens,
+            "retry_backlog": len(self._backoff),
+            "faults_fired": len(self.faults.fired) if self.faults else 0,
+        }
 
     # ------------------------------------------------------------ high level
     def run(self, requests=()) -> dict:
         """Submit ``requests`` (prompts, or ``(prompt, SamplingParams)``
         pairs) and tick until all queued work drains.  Returns
         ``{rid: np.ndarray tokens}`` for the requests submitted here (or for
-        everything drained, when called with no new requests).  If a tick
-        raises, all live requests are aborted (slots, blocks and sessions
-        released) before the error propagates."""
+        everything drained, when called with no new requests).  Requests
+        that end ``failed``/``timeout``/``rejected`` are simply absent from
+        the result (their state lives in ``engine.requests[rid].state``).
+        If a tick raises past the recovery layer, all live requests are
+        aborted (slots, blocks and sessions released) before the error
+        propagates."""
         rids = [self.submit(*self._split(r)) for r in requests]
         # tokens are snapshotted as requests retire — a drain larger than
         # max_retained_requests must not lose early results to pruning
         drained: dict = {}
         try:
-            while self.sched.has_work:
+            while self.has_work:
                 for rid in self.step()["finished"]:
                     drained[rid] = np.asarray(self.requests[rid].tokens,
                                               np.int32)
@@ -1078,7 +1496,7 @@ class ServeEngine:
             self.abort_all()
             raise
         if rids:
-            return {rid: drained[rid] for rid in rids}
+            return {rid: drained[rid] for rid in rids if rid in drained}
         return drained
 
     def stream(self, requests=()):
@@ -1087,7 +1505,7 @@ class ServeEngine:
         for r in requests:
             self.submit(*self._split(r))
         try:
-            while self.sched.has_work:
+            while self.has_work:
                 out = self.step()
                 # a request can land 2 tokens in one tick (prefill + fused
                 # decode); only its LAST token carries the done flag
@@ -1149,7 +1567,7 @@ class ServeEngine:
                                     temperature=temperature)
             rids = [self.submit(p, params) for p in prompts]
             done: dict = {}
-            while self.sched.has_work:
+            while self.has_work:
                 for rid in self.step()["finished"]:
                     done[rid] = np.asarray(self.requests[rid].tokens,
                                            np.int32)

@@ -52,6 +52,11 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     FINISHED = "finished"
     ABORTED = "aborted"
+    #: terminal fault-tolerance outcomes: retries exhausted on a blamed
+    #: request / SLO deadline elapsed / shed at admission (degrade level 3)
+    FAILED = "failed"
+    TIMEOUT = "timeout"
+    REJECTED = "rejected"
 
 
 @dataclasses.dataclass
@@ -85,6 +90,11 @@ class Request:
     slo: object = None
     #: times this request was preempted (evicted-and-requeued)
     preemptions: int = 0
+    #: times this request was blamed for a fault and requeued for a full
+    #: recompute; the engine fails it past ``max_request_retries``
+    retries: int = 0
+    #: earliest re-admission time while serving a retry backoff
+    retry_at: float = 0.0
     #: context length the CURRENT admission must prefill to before the
     #: request can decode — ``prompt_len`` on a fresh admission, and
     #: ``prompt_len + len(tokens)`` when resuming after preemption (the
@@ -207,13 +217,11 @@ class Scheduler:
         req.state = state
         req.finish_time = time.perf_counter()
 
-    def preempt(self, req: Request) -> None:
-        """Evict-and-requeue: return the slot to the allocator and put the
-        request back at the FRONT of the waiting queue, still carrying its
-        generated tokens (state QUEUED — it competes for re-admission like
-        any arrival, but a policy reorder sees its original submit time /
-        priority).  The engine parks its KV first; see
-        ``ServeEngine.preempt``."""
+    def vacate(self, req: Request) -> None:
+        """Take the slot back WITHOUT enqueueing the request anywhere:
+        state returns to QUEUED and the caller decides where it waits (the
+        engine's retry-backoff pen uses this so a blamed request cannot
+        head-of-line block the real queue while backing off)."""
         if req.slot is None or self.running.get(req.slot) is not req:
             raise ValueError(f"request {req.rid} does not hold a slot")
         del self.running[req.slot]
@@ -221,16 +229,27 @@ class Scheduler:
         self._free.sort(reverse=True)           # deterministic ascending pops
         req.slot = None
         req.state = RequestState.QUEUED
+
+    def preempt(self, req: Request) -> None:
+        """Evict-and-requeue: return the slot to the allocator and put the
+        request back at the FRONT of the waiting queue, still carrying its
+        generated tokens (state QUEUED — it competes for re-admission like
+        any arrival, but a policy reorder sees its original submit time /
+        priority).  The engine parks its KV first; see
+        ``ServeEngine.preempt``."""
+        self.vacate(req)
         req.preemptions += 1
         self.waiting.appendleft(req)
 
-    def remove_waiting(self, req: Request) -> bool:
-        """Drop a still-queued request (abort path); False if not queued."""
+    def remove_waiting(self, req: Request,
+                       state=RequestState.ABORTED) -> bool:
+        """Drop a still-queued request (abort/timeout path); False if not
+        queued."""
         try:
             self.waiting.remove(req)
         except ValueError:
             return False
-        req.state = RequestState.ABORTED
+        req.state = state
         return True
 
 

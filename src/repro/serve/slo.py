@@ -47,12 +47,15 @@ class SLOSpec:
 
     Immutable — safe to share across every request of a tenant.  ``None``
     targets mean "no objective": the request trivially meets its SLO and
-    sorts last under EDF."""
+    sorts last under EDF.  ``deadline_s`` is HARD, not advisory: the
+    engine cancels the request (status ``timeout``, resources released)
+    once that many seconds elapse after submission."""
 
     ttft_target_s: float | None = None
     tpot_target_s: float | None = None
     tenant: str = "default"
     priority: int = 0
+    deadline_s: float | None = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -60,7 +63,8 @@ class SLOSpec:
     @classmethod
     def from_dict(cls, d: dict) -> "SLOSpec":
         return cls(**{k: d[k] for k in
-                      ("ttft_target_s", "tpot_target_s", "tenant", "priority")
+                      ("ttft_target_s", "tpot_target_s", "tenant",
+                       "priority", "deadline_s")
                       if k in d})
 
 

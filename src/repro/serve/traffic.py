@@ -142,12 +142,19 @@ def max_seq_for(trace, pad: int = 0) -> int:
     return max(len(t.prompt) + t.max_new_tokens for t in trace) + pad
 
 
+#: JSONL trace schema version written by :func:`save_trace`.  Bump on any
+#: incompatible field change; :func:`load_trace` refuses unknown versions
+#: instead of silently misreading a future trace.
+TRACE_SCHEMA = 1
+
+
 def save_trace(path: str, trace, seed: int | None = None,
                meta: dict | None = None) -> None:
-    """Write a trace as JSONL: one ``_meta`` header line (seed + anything
-    in ``meta``), then one request per line."""
+    """Write a trace as JSONL: one ``_meta`` header line (schema version +
+    seed + anything in ``meta``), then one request per line."""
     with open(path, "w") as f:
-        f.write(json.dumps({"_meta": dict(meta or {}, seed=seed,
+        f.write(json.dumps({"_meta": dict(meta or {}, schema=TRACE_SCHEMA,
+                                          seed=seed,
                                           n_requests=len(trace))}) + "\n")
         for t in trace:
             f.write(json.dumps({
@@ -158,7 +165,9 @@ def save_trace(path: str, trace, seed: int | None = None,
 
 
 def load_trace(path: str):
-    """Replay a JSONL trace; returns ``(trace, meta)``."""
+    """Replay a JSONL trace; returns ``(trace, meta)``.  Traces written by
+    a newer schema are rejected with a readable error (a header with no
+    ``schema`` field is the legacy v0 layout, which v1 reads fine)."""
     trace, meta = [], {}
     with open(path) as f:
         for line in f:
@@ -168,6 +177,12 @@ def load_trace(path: str):
             d = json.loads(line)
             if "_meta" in d:
                 meta = d["_meta"]
+                schema = meta.get("schema", 0)
+                if schema > TRACE_SCHEMA:
+                    raise ValueError(
+                        f"{path}: trace schema v{schema} is newer than "
+                        f"this reader (v{TRACE_SCHEMA}) — regenerate the "
+                        f"trace or upgrade repro.serve.traffic")
                 continue
             trace.append(TraceRequest(
                 arrival_s=float(d.get("arrival_s", 0.0)),

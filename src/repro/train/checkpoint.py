@@ -71,19 +71,62 @@ def save(ckpt_dir: str, step: int, state: dict, process_index: int = 0,
 
 
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest *restorable* step: skips ``.tmp`` dirs (in-flight saves),
+    dirs without COMMIT (crashed mid-save), and anything that merely looks
+    like a checkpoint dir (``step_garbage``, stray files)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(ckpt_dir, name, "COMMIT")):
-                steps.append(int(name.split("_")[1]))
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        try:
+            step = int(name.split("_", 1)[1])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, name, "COMMIT")):
+            steps.append(step)
     return max(steps) if steps else None
+
+
+def _validate(manifest: dict, like, path: str) -> None:
+    """Refuse to restore a checkpoint whose tree disagrees with ``like``."""
+    want_keys = _keys(like)
+    got_keys = list(manifest.get("keys", []))
+    if got_keys != want_keys:
+        missing = [k for k in want_keys if k not in got_keys]
+        extra = [k for k in got_keys if k not in want_keys]
+        raise ValueError(
+            f"{path}: checkpoint tree mismatch — "
+            f"missing from checkpoint: {missing[:5]}, "
+            f"unexpected in checkpoint: {extra[:5]}"
+            + (" (keys agree but order differs)"
+               if not missing and not extra else ""))
+    leaves, _ = _flatten(like)
+    bad = []
+    for key, shape, dtype, leaf in zip(want_keys, manifest.get("shapes", []),
+                                       manifest.get("dtypes", []), leaves):
+        want_shape = list(np.shape(leaf))
+        want_dtype = str(leaf.dtype) if hasattr(leaf, "dtype") \
+            else str(np.asarray(leaf).dtype)
+        if list(shape) != want_shape or str(dtype) != want_dtype:
+            bad.append(f"{key}: checkpoint {tuple(shape)}/{dtype} "
+                       f"vs target {tuple(want_shape)}/{want_dtype}")
+    if bad:
+        raise ValueError(f"{path}: leaf mismatch — " + "; ".join(bad[:5])
+                         + (f" (+{len(bad) - 5} more)" if len(bad) > 5
+                            else ""))
 
 
 def restore(ckpt_dir: str, like: dict, step: int | None = None,
             shardings=None, process_index: int = 0) -> tuple:
-    """Returns (step, state) with arrays placed per ``shardings`` (or host)."""
+    """Returns (step, state) with arrays placed per ``shardings`` (or host).
+
+    The manifest is validated against ``like`` before any array leaves the
+    shard file: a checkpoint saved from a different model (missing/extra
+    keys, mismatched shapes or dtypes) fails with an error naming the
+    offending leaves instead of silently unflattening garbage.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -94,6 +137,7 @@ def restore(ckpt_dir: str, like: dict, step: int | None = None,
     data = np.load(os.path.join(path, f"shard_p{process_index}.npz"))
     leaves = [data[f"leaf_{i}"] for i in range(len(manifest["keys"]))]
     _, treedef = _flatten(like)
+    _validate(manifest, like, path)
     if shardings is not None:
         sh_leaves = jax.tree.leaves(
             shardings, is_leaf=lambda x: hasattr(x, "spec"))

@@ -241,6 +241,63 @@ def test_engine_random_submit_step_preempt_abort(ops_list):
                 (rid, idx, req.preemptions)
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["poison", "nan_logits",
+                                           "tick_error", "stall",
+                                           "pressure", "preempt"]),
+                          st.integers(0, 2), st.integers(1, 2),
+                          st.integers(0, 4)),
+                max_size=4))
+def test_random_fault_plans_never_corrupt_innocents(specs):
+    """Arbitrary small fault plans (poisons, NaN rows, tick errors, stall /
+    pressure windows, host preemptions) against live traffic: the paged
+    pool invariants hold after every tick, untargeted requests always
+    finish byte-identically to their solo references, and a targeted
+    request may only fail if its cumulative fault charges exceed the
+    engine's retry budget."""
+    from repro.serve.faults import FaultPlan, FaultSpec
+    from repro.serve.scheduler import RequestState
+
+    fx = _serve_fixture()
+    eng, prompts, refs, sp = (fx["eng"], fx["prompts"], fx["refs"],
+                              fx["sp"])
+    idxs = (1, 3, 5)
+    rids = [eng.submit(prompts[i], sp) for i in idxs]
+    t0 = eng.ticks
+    plan, charges = [], {}
+    for kind, tgt, ttl, off in specs:
+        if kind in ("poison", "nan_logits"):
+            plan.append(FaultSpec(kind=kind, rid=rids[tgt], ttl=ttl))
+            charges[rids[tgt]] = charges.get(rids[tgt], 0) + ttl
+        elif kind == "tick_error":
+            plan.append(FaultSpec(kind=kind, tick=t0 + 1 + off))
+        elif kind == "stall":
+            plan.append(FaultSpec(kind=kind, tick=t0 + 1 + off,
+                                  duration=2, stall_s=0.002))
+        elif kind == "pressure":
+            plan.append(FaultSpec(kind=kind, tick=t0 + 1 + off,
+                                  duration=2, blocks=1))
+        else:
+            plan.append(FaultSpec(kind="preempt", tick=t0 + 1 + off))
+    eng.faults = FaultPlan(plan)
+    try:
+        while eng.has_work:
+            eng.step()
+            _paged_pool_invariants(eng.pool, [])
+    finally:
+        eng.faults = None
+    assert not any(eng._owed.values()), eng._owed
+    for rid, idx in zip(rids, idxs):
+        req = eng.requests[rid]
+        if req.state is RequestState.FAILED:
+            # only a sufficiently-charged target may exhaust its retries
+            assert charges.get(rid, 0) > eng.max_request_retries, \
+                (rid, charges)
+        else:
+            assert req.state is RequestState.FINISHED, req.state
+            assert list(req.tokens) == list(refs[idx]), (rid, idx)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 3),
                           st.integers(1, 40)),

@@ -891,3 +891,221 @@ def test_serving_tool_speculative_and_bandwidth_sections():
         + bw["kv_read_bytes"]) / spec["committed_tokens"]
     for row in rep["by_request"].values():
         assert row["accepted"] <= row["drafted"]
+
+
+# ------------------------------------------------------------ fault tolerance
+def _pool_whole(eng):
+    eng.pool.scrub()
+    st = eng.pool.stats()
+    assert (st["blocks_live"] + st["blocks_evictable"]
+            + st["blocks_free"] == st["n_blocks"]), st
+
+
+def _drain(eng):
+    out = {}
+    while eng.has_work:
+        for rid in eng.step()["finished"]:
+            out[rid] = list(eng.requests[rid].tokens)
+    return out
+
+
+def test_persistent_poison_isolated_innocents_byte_identical():
+    """THE recovery contract: one persistently poisoned request ends
+    ``failed`` after its retries exhaust; every innocent co-scheduled
+    request finishes byte-identically to a fault-free twin, with zero
+    KV bytes copied during isolation, and the serving tool's health
+    section accounts for every event."""
+    from repro.serve import FaultPlan, FaultSpec
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (19, 33, 25, 40, 22, 28),
+                              shared_prefix=16, seed=5)
+    _, base = _run_staggered(cfg, params, prompts, max_new=8,
+                             max_seq=96, max_slots=4)
+
+    plan = FaultPlan([FaultSpec(kind="poison", rid=1, ttl=10 ** 6)])
+    with pasta.Session(tools="serving", name="chaos") as sess:
+        sp = SamplingParams(max_new_tokens=8)
+        eng = ServeEngine(cfg, params, max_seq=96, max_slots=4,
+                          session=sess, faults=plan,
+                          retry_backoff_s=0.0)
+        rids = [eng.submit(p, sp) for p in prompts[:3]]
+        eng.step()
+        rids += [eng.submit(p, sp) for p in prompts[3:]]
+        _drain(eng)
+    assert eng.requests[1].state is RequestState.FAILED
+    for rid in rids:
+        if rid == 1:
+            continue
+        assert eng.requests[rid].state is RequestState.FINISHED
+        assert list(eng.requests[rid].tokens) == base[rid], f"rid={rid}"
+    h = eng.health()
+    assert h["failed"] == 1 and h["request_retries"] == 2
+    assert h["fault_ticks"] >= 3 and h["probes"] > 0
+    assert h["isolated_innocents"] > 0 and h["retry_backlog"] == 0
+    _pool_whole(eng)
+    rep = sess.reports()["serving"].data
+    assert rep["pool"]["duplicate_copy_bytes"] == 0
+    th = rep["health"]
+    assert th["failed"] == 1 and th["retries"] == h["request_retries"]
+    assert th["blamed_requests"] == 3          # one blame per fault tick
+    assert th["isolated_innocents"] == h["isolated_innocents"]
+    assert th["probes"] == h["probes"]
+    assert th["recomputed_tokens"] == h["recomputed_tokens"] > 0
+    assert rep["by_request"][1]["status"] == "failed"
+
+
+def test_nan_logits_surgical_blame_no_tick_abandon():
+    """A NaN logits row blames exactly its request (no bisection, no
+    innocent preemption); the victim retries to a byte-identical finish."""
+    from repro.serve import FaultPlan, FaultSpec
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 14, 11, 7), seed=6)
+    _, base = _run_staggered(cfg, params, prompts, max_new=6,
+                             max_seq=64, max_slots=4)
+    plan = FaultPlan([FaultSpec(kind="nan_logits", rid=2, ttl=1)])
+    eng, out = _run_staggered(cfg, params, prompts, max_new=6, max_seq=64,
+                              max_slots=4, faults=plan, retry_backoff_s=0.0)
+    assert out == base
+    h = eng.health()
+    assert h["request_retries"] == 1 and h["failed"] == 0
+    assert h["isolated_innocents"] == 0 and h["probes"] == 0
+    _pool_whole(eng)
+
+
+def test_transient_tick_error_retries_tick():
+    """An unattributable tick error retries the whole tick: nobody is
+    blamed, nothing is lost, outputs are byte-identical."""
+    from repro.serve import FaultPlan, FaultSpec
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 14, 11), seed=7)
+    _, base = _run_staggered(cfg, params, prompts, max_new=6,
+                             max_seq=64, max_slots=2)
+    plan = FaultPlan([FaultSpec(kind="tick_error", tick=3)])
+    eng, out = _run_staggered(cfg, params, prompts, max_new=6, max_seq=64,
+                              max_slots=2, faults=plan)
+    assert out == base
+    h = eng.health()
+    assert h["tick_retries"] == 1 and h["request_retries"] == 0
+    assert h["fault_ticks"] == 1 and h["failed"] == 0
+
+
+def test_host_preempt_signal_is_lossless():
+    """A host-preemption signal parks a runner in the prefix store; it
+    resumes byte-identically (zero-copy, like a policy preemption)."""
+    from repro.serve import FaultPlan, FaultSpec
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (21, 35, 27), shared_prefix=16, seed=8)
+    _, base = _run_staggered(cfg, params, prompts, max_new=8,
+                             max_seq=96, max_slots=2)
+    plan = FaultPlan([FaultSpec(kind="preempt", tick=4, count=1)])
+    eng, out = _run_staggered(cfg, params, prompts, max_new=8, max_seq=96,
+                              max_slots=2, faults=plan)
+    assert out == base
+    h = eng.health()
+    assert h["host_preempt_signals"] == 1
+    assert h["recovered_tokens"] > 0           # the park round-tripped KV
+    _pool_whole(eng)
+
+
+def test_deadline_s_is_hard_timeout():
+    """``SLOSpec.deadline_s`` cancels the request (state ``timeout``) and
+    releases every resource; co-running requests are untouched."""
+    from repro.serve import SLOSpec
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    p_doomed, p_fine = _ragged_prompts(cfg, (9, 12), seed=9)
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=2)
+    sp = SamplingParams(max_new_tokens=48)
+    doomed = eng.submit(p_doomed, sp, slo=SLOSpec(deadline_s=0.0))
+    fine = eng.submit(p_fine, SamplingParams(max_new_tokens=4))
+    _drain(eng)
+    assert eng.requests[doomed].state is RequestState.TIMEOUT
+    assert eng.requests[fine].state is RequestState.FINISHED
+    assert eng.health()["timeouts"] == 1
+    _pool_whole(eng)
+
+
+def test_retry_exhaustion_and_abort_in_backoff():
+    """max_request_retries bounds blame retries; a request waiting in the
+    retry pen can still be aborted cleanly."""
+    from repro.serve import FaultPlan, FaultSpec
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    (prompt,) = _ragged_prompts(cfg, (9,), seed=10)
+    sp = SamplingParams(max_new_tokens=4)
+
+    plan = FaultPlan([FaultSpec(kind="poison", rid=0, ttl=10 ** 6)])
+    eng = ServeEngine(cfg, params, max_seq=32, max_slots=1, faults=plan,
+                      max_request_retries=1, retry_backoff_s=0.0)
+    rid = eng.submit(prompt, sp)
+    _drain(eng)
+    assert eng.requests[rid].state is RequestState.FAILED
+    assert eng.health()["request_retries"] == 1    # then the cap fails it
+    _pool_whole(eng)
+
+    plan2 = FaultPlan([FaultSpec(kind="poison", rid=0, ttl=10 ** 6)])
+    eng2 = ServeEngine(cfg, params, max_seq=32, max_slots=1, faults=plan2,
+                       retry_backoff_s=60.0)      # parks rid 0 in the pen
+    rid2 = eng2.submit(prompt, sp)
+    eng2.step()
+    assert eng2.health()["retry_backlog"] == 1 and eng2.has_work
+    assert eng2.abort(rid2) is True
+    assert eng2.requests[rid2].state is RequestState.ABORTED
+    assert not eng2.has_work and eng2.health()["retry_backlog"] == 0
+    _pool_whole(eng2)
+
+
+def test_degradation_ladder_sheds_and_restores():
+    """Sustained slow ticks shed spec decode, then restore once calm; at
+    level 3 admissions are rejected outright."""
+    from repro.serve import FaultPlan, FaultSpec
+
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = _ragged_prompts(cfg, (9, 14, 11, 7), seed=11)
+    # the stall lands AFTER the 5-tick median warm-up window, so the
+    # baseline the 3x-median detector compares against is the fast ticks
+    plan = FaultPlan([FaultSpec(kind="stall", tick=8, duration=3,
+                                stall_s=0.03)])
+    eng = ServeEngine(cfg, params, max_seq=64, max_slots=4, faults=plan,
+                      spec_decode=3, slow_tick_s=0.005)
+    eng.warmup(sorted({len(p) for p in prompts}))
+    _, base = _run_staggered(cfg, params, prompts, max_new=40,
+                             max_seq=64, max_slots=4, spec_decode=3)
+    sp = SamplingParams(max_new_tokens=40)
+    rids = [eng.submit(p, sp) for p in prompts]
+    out = {r: None for r in rids}
+    out.update(_drain(eng))
+    h = eng.health()
+    assert h["degraded_ticks"] > 0, h          # the ladder shed load
+    # shedding speculation is a scheduling change only: outputs unchanged
+    assert out == base
+    for _ in range(20):                        # idle ticks are calm ticks:
+        eng.step()                             # the ladder must restore
+    assert eng.degrade_level == 0, eng.health()
+
+    eng.degrade_level = 3                      # white-box: saturated ladder
+    rej = eng.submit(prompts[0], sp)
+    assert eng.requests[rej].state is RequestState.REJECTED
+    assert eng.health()["rejections"] == 1
+    assert not eng.has_work                    # rejected work never queues
+
+
+def test_fault_injection_requires_paged_mode():
+    cfg = C.reduced(C.get("paper-gpt2"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, max_seq=32, max_slots=1, paged=False,
+                    faults="storm")
+    with pytest.raises(ValueError, match="preset"):
+        ServeEngine(cfg, params, max_seq=32, max_slots=1, faults="kaboom")

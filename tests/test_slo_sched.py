@@ -206,6 +206,43 @@ def test_trace_jsonl_roundtrip(tmp_path):
         assert x.slo == y.slo
 
 
+def test_trace_schema_versioning(tmp_path):
+    """save_trace stamps the schema version; load_trace refuses traces
+    from a newer writer, accepts legacy headerless-schema files, and
+    round-trips the hard deadline."""
+    from repro.serve.traffic import TRACE_SCHEMA, TraceRequest
+
+    slo = SLOSpec(tenant="t", deadline_s=2.5)
+    trace = [TraceRequest(arrival_s=0.0,
+                          prompt=np.arange(4, dtype=np.int32),
+                          max_new_tokens=3, slo=slo)]
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(path, trace, seed=7)
+    back, meta = load_trace(path)
+    assert meta["schema"] == TRACE_SCHEMA
+    assert back[0].slo.deadline_s == 2.5
+
+    # legacy v0: header without a schema field still loads
+    lines = open(path).read().splitlines()
+    head = json.loads(lines[0])["_meta"]
+    del head["schema"]
+    legacy = str(tmp_path / "legacy.jsonl")
+    with open(legacy, "w") as f:
+        f.write(json.dumps({"_meta": head}) + "\n")
+        f.write("\n".join(lines[1:]) + "\n")
+    back2, meta2 = load_trace(legacy)
+    assert "schema" not in meta2 and len(back2) == 1
+
+    # a future writer's trace is refused, not misread
+    head["schema"] = TRACE_SCHEMA + 1
+    future = str(tmp_path / "future.jsonl")
+    with open(future, "w") as f:
+        f.write(json.dumps({"_meta": head}) + "\n")
+        f.write("\n".join(lines[1:]) + "\n")
+    with pytest.raises(ValueError, match=r"schema v2.*newer"):
+        load_trace(future)
+
+
 def test_two_tenant_bursty_preset():
     trace = two_tenant_bursty(vocab=64, seed=0)
     assert PRESETS["two-tenant-bursty"] is two_tenant_bursty
