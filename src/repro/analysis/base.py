@@ -1,0 +1,272 @@
+"""Pass framework for the ahead-of-time static analyzer.
+
+Mirrors the PASTA *tool* registry (``repro.core.tools.base``) one level
+earlier in the lifecycle: where tools consume events from a run, an
+:class:`AnalysisPass` consumes the *compiled artifact itself* — the parsed
+HLO module plus the overlap-aware rollup ``core.hlo.analyze`` already
+derives from it — and returns typed :class:`~repro.analysis.findings.Finding`
+records without executing anything.
+
+Passes register under a string key::
+
+    @register_pass("exposed-collectives")
+    class ExposedCollectivesPass(AnalysisPass): ...
+
+and are selectable by the same spec-string grammar as tools
+(``"exposed-collectives:threshold_frac=0.2,peak-memory"``), so the launch
+drivers accept ``--lint-passes`` exactly like ``--pasta-tools``.
+
+:func:`run_passes` is the one-call entry point: parse + roll up once,
+hand every pass the shared :class:`AnalysisContext`, collect findings,
+apply the baseline, and (when a session is active) emit each finding as a
+``FINDING`` event so dynamic tools can correlate static predictions with
+measured behaviour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core import hlo as hlo_mod
+from ..core.events import Event, EventKind
+from ..core.tools.base import parse_tool_spec
+from .findings import Finding, Findings
+
+#: the standard pass suite, in execution order
+DEFAULT_SPEC = ("exposed-collectives,implicit-reshard,dtype-promotion,"
+                "peak-memory,host-sync")
+
+
+@dataclasses.dataclass
+class AnalysisContext:
+    """Everything a pass may consult — shared across the suite so the
+    artifact is parsed and rolled up exactly once."""
+
+    module: hlo_mod.HloModule | None = None
+    stats: hlo_mod.HloStats | None = None
+    text: str = ""
+    hw: dict = dataclasses.field(default_factory=dict)
+    #: ordered mesh axis sizes, e.g. {"pod": 2, "data": 2, "model": 2}
+    mesh_axes: dict = dataclasses.field(default_factory=dict)
+    #: logical->physical sharding rule table in force for the compile
+    rules: dict = dataclasses.field(default_factory=dict)
+    #: cell kind: "train" | "prefill" | "decode" | "" (unknown)
+    kind: str = ""
+    #: pod topology forwarded to the overlap model
+    pods: int | None = None
+    n_devices: int | None = None
+    #: per-device HBM budget in bytes (defaults to hw["hbm_bytes"])
+    device_budget: float | None = None
+    #: [(name, jaxpr)] pairs for pre-lowering dtype analysis
+    jaxprs: list = dataclasses.field(default_factory=list)
+    default_trip: int = 1
+    label: str = ""
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def budget_bytes(self) -> float:
+        if self.device_budget:
+            return float(self.device_budget)
+        return float(self.hw.get("hbm_bytes", 0.0))
+
+
+class AnalysisPass:
+    """One static lint pass.  Subclass and override :meth:`run`; declare
+    tunables in ``KNOBS`` so spec strings can override them."""
+
+    KNOBS: dict = {}
+
+    def __init__(self, **knobs):
+        self.knobs = dict(self.KNOBS)
+        unknown = set(knobs) - set(self.KNOBS)
+        if unknown:
+            raise TypeError(
+                f"unknown knob(s) {sorted(unknown)} for pass "
+                f"{getattr(self, 'REGISTRY_NAME', type(self).__name__)!r}; "
+                f"known: {sorted(self.KNOBS)}")
+        self.knobs.update(knobs)
+
+    def run(self, ctx: AnalysisContext) -> list:
+        """Return a list of Findings.  Must never raise on malformed input:
+        skip what cannot be analyzed (``run_passes`` converts an escape into
+        a ``pass-error`` finding as a backstop)."""
+        raise NotImplementedError
+
+    def finding(self, severity: str, message: str, **kw) -> Finding:
+        return Finding(pass_name=getattr(self, "REGISTRY_NAME",
+                                         type(self).__name__),
+                       severity=severity, message=message, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry + spec strings (same grammar as the tool registry)
+# ---------------------------------------------------------------------------
+
+#: registry name -> AnalysisPass subclass (populated by @register_pass)
+PASS_REGISTRY: dict = {}
+
+
+def register_pass(name: str):
+    """Class decorator mirroring ``core.tools.base.register``."""
+    def deco(cls):
+        prev = PASS_REGISTRY.get(name)
+        if prev is not None and prev is not cls:
+            raise ValueError(f"pass name {name!r} is already registered to "
+                             f"{prev.__name__}")
+        PASS_REGISTRY[name] = cls
+        cls.REGISTRY_NAME = name
+        return cls
+    return deco
+
+
+def parse_pass_spec(spec: str) -> list:
+    """``"name[:knob=val[,knob=val...]][,name...]"`` →
+    ``[(name, {knob: value}), ...]`` — the tool-spec grammar verbatim."""
+    return parse_tool_spec(spec)
+
+
+def format_pass_spec(entries) -> str:
+    """Canonical spec string for ``[(name, knobs)]`` — the round-trip
+    inverse of :func:`parse_pass_spec` (knob order is sorted)."""
+    segs = []
+    for name, knobs in entries:
+        if knobs:
+            kv = ",".join(f"{k}={_fmt_knob(v)}"
+                          for k, v in sorted(knobs.items()))
+            segs.append(f"{name}:{kv}")
+        else:
+            segs.append(name)
+    return ",".join(segs)
+
+
+def _fmt_knob(v) -> str:
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    return str(v)
+
+
+def resolve_passes(spec=None) -> list:
+    """Instantiate passes from a spec string / list (``None`` → the default
+    suite).  Accepts instances, classes, names, specs, and (name, kwargs)
+    pairs — mirrors ``resolve_tools``."""
+    if spec is None:
+        spec = DEFAULT_SPEC
+
+    def build(name: str, knobs: dict):
+        if name not in PASS_REGISTRY:
+            raise KeyError(f"unknown analysis pass {name!r}; "
+                           f"known: {sorted(PASS_REGISTRY)}")
+        return PASS_REGISTRY[name](**knobs)
+
+    if isinstance(spec, AnalysisPass):
+        return [spec]
+    if isinstance(spec, str):
+        return [build(n, k) for n, k in parse_pass_spec(spec)]
+    out = []
+    for item in spec:
+        if isinstance(item, AnalysisPass):
+            out.append(item)
+        elif isinstance(item, type) and issubclass(item, AnalysisPass):
+            out.append(item())
+        elif isinstance(item, str):
+            out.extend(build(n, k) for n, k in parse_pass_spec(item))
+        elif isinstance(item, tuple) and len(item) == 2:
+            out.append(build(item[0], dict(item[1])))
+        else:
+            raise TypeError(f"cannot resolve pass spec item {item!r}")
+    return out
+
+
+def spec_of(passes) -> str:
+    """Canonical spec string of instantiated passes (records what ran)."""
+    return format_pass_spec(
+        [(getattr(p, "REGISTRY_NAME", type(p).__name__),
+          {k: v for k, v in p.knobs.items() if v != p.KNOBS.get(k)})
+         for p in passes])
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+
+def build_context(target, *, stats=None, hw=None, default_trip: int = 1,
+                  pods=None, n_devices=None, mesh_axes=None, rules=None,
+                  kind: str = "", jaxprs=(), device_budget=None,
+                  label: str = "", meta=None) -> AnalysisContext:
+    """Parse + roll up ``target`` (HLO text, an ``HloModule``, or a compiled
+    executable with ``as_text()``) into a shared pass context."""
+    text = ""
+    if isinstance(target, hlo_mod.HloModule):
+        module = target
+    else:
+        text = target if isinstance(target, str) else target.as_text()
+        module = hlo_mod.parse_hlo(text)
+    if hw is None:
+        hw = hlo_mod._default_hw()
+    if stats is None:
+        stats = hlo_mod.analyze(module, default_trip=default_trip, hw=hw,
+                                pods=pods, n_devices=n_devices)
+    if mesh_axes is not None and not isinstance(mesh_axes, dict):
+        mesh_axes = dict(mesh_axes.shape)       # a jax Mesh
+    return AnalysisContext(
+        module=module, stats=stats, text=text, hw=dict(hw),
+        mesh_axes=dict(mesh_axes or {}), rules=dict(rules or {}),
+        kind=kind, pods=pods, n_devices=n_devices,
+        device_budget=device_budget, jaxprs=list(jaxprs),
+        default_trip=default_trip, label=label, meta=dict(meta or {}))
+
+
+def run_passes(target, passes=None, *, baseline=None, session=None,
+               emit_events: bool = True, **ctx_kw) -> Findings:
+    """Run a pass suite over one compiled artifact and return the findings.
+
+    ``target``/``ctx_kw`` feed :func:`build_context` (pass a precomputed
+    ``stats=`` to skip the re-rollup when the artifact was already walked,
+    e.g. by ``Session.capture_compiled``).  ``baseline`` suppresses
+    known-accepted findings.  Findings are additionally emitted as
+    ``FINDING`` events into ``session`` (default: the active session) so
+    dynamic tools can correlate them; pass ``emit_events=False`` to skip.
+
+    Never raises on malformed artifacts: a pass that escapes is recorded
+    as a single ``pass-error`` finding and the suite continues.
+    """
+    suite = resolve_passes(passes)
+    ctx = build_context(target, **ctx_kw)
+    out = Findings(label=ctx.label, spec=spec_of(suite),
+                   meta=dict(ctx.meta))
+    for key, n in getattr(ctx.stats, "warnings", {}).items():
+        out.warn(key, n)
+    for p in suite:
+        name = getattr(p, "REGISTRY_NAME", type(p).__name__)
+        try:
+            found = p.run(ctx) or []
+        except Exception as e:                              # noqa: BLE001
+            out.warn(f"pass-error:{name}")
+            found = [Finding(pass_name=name, severity="error",
+                             opcode="pass-error",
+                             message=f"pass crashed: {type(e).__name__}: {e}",
+                             fix_hint="file a bug against repro.analysis; "
+                                      "the artifact confused the pass")]
+        out.extend(found)
+    out.meta.update(ctx.meta)       # passes may publish estimates via ctx
+    out.apply_baseline(baseline)
+    if emit_events:
+        _emit_findings(out, session)
+    return out
+
+
+def _emit_findings(findings: Findings, session=None) -> None:
+    if session is None:
+        from ..core.session import active_session
+        session = active_session()
+    if session is None:
+        return
+    for f in findings:
+        session.handler.emit(Event(
+            EventKind.FINDING, name=f.pass_name,
+            size=int(f.bytes_impact),
+            attrs={"severity": f.severity, "key": f.key,
+                   "opcode": f.opcode, "instruction": f.instruction,
+                   "message": f.message, "suppressed": f.suppressed,
+                   "seconds_impact": f.seconds_impact,
+                   "label": findings.label}))

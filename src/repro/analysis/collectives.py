@@ -1,0 +1,335 @@
+"""Collective-traffic lint passes: exposed comm + unintended reshards.
+
+Both passes consume the overlap-aware rollup ``core.hlo.analyze`` already
+computed (``stats.collective_instances`` carries per-instance wire bytes,
+alpha-beta comm seconds, hidden/exposed splits, and the ICI/DCI link
+classification), so they add no second walk over the artifact.
+"""
+
+from __future__ import annotations
+
+from .base import AnalysisPass, register_pass
+
+import re as _re
+
+#: ops a value may pass through while still being "the same value" for
+#: reshard-provenance purposes: layout/dtype-only ops plus the adds that
+#: accumulate loop-carried gradient buckets
+_PROVENANCE_CHAIN = {"convert", "bitcast", "reshape", "copy", "transpose",
+                     "slice", "dynamic-slice", "optimization-barrier",
+                     "opt-barrier", "add", "multiply", "divide", "tuple"}
+
+_GTE_INDEX_RE = _re.compile(r"index=(\d+)")
+
+#: jax primitive names that appear as the *final* op_name segment when the
+#: user explicitly asked for the collective (shard_map / lax collectives);
+#: partitioner-inserted reshards instead inherit the name of the op they
+#: serve (gather, dot_general, transpose, while, ...)
+_EXPLICIT_COLLECTIVE_PRIMS = {"all_gather", "all_to_all", "ppermute",
+                              "psum", "psum_scatter", "reduce_scatter",
+                              "all_reduce", "pbroadcast", "psum_start",
+                              "psum_wait"}
+
+
+def _explicitly_requested(op_name: str) -> bool:
+    tail = op_name.rsplit("/", 1)[-1]
+    # strip a trailing jax suffix like "all_gather[axis_name=...]"
+    tail = tail.split("[", 1)[0]
+    return tail in _EXPLICIT_COLLECTIVE_PRIMS
+
+
+def _upstream_evidence(module, comp, ins, limit: int = 256) -> tuple:
+    """Bounded upstream-dataflow walk from a reshard collective.
+
+    Returns ``(reaches_entry_param, reduce_scatters)`` where
+    ``reduce_scatters`` is the list of reduce-scatter Instructions found
+    on the provenance chain.  The walk follows layout-only ops and
+    accumulation adds, and *threads through while loops*: a
+    ``get-tuple-element(while, index=i)`` continues at element ``i`` of
+    both the loop body's root tuple and the loop's init tuple — that is
+    how the tail all-gather of an all-reduce that XLA decomposed around a
+    loop (reduce-scatter inside, all-gather after) finds its partner.
+    """
+    entry = module.computations.get(module.entry)
+    queue = [(comp, ins)]
+    seen = set()
+    reaches_param = False
+    reduce_scatters = []
+    while queue and len(seen) < limit:
+        c, cur = queue.pop()
+        key = (c.name, cur.name)
+        if key in seen:
+            continue
+        seen.add(key)
+        for o in cur.operands:
+            nxt = c.instructions.get(o.lstrip("%"))
+            if nxt is None:
+                continue
+            op = nxt.opcode
+            if op == "reduce-scatter":
+                reduce_scatters.append(nxt)
+            elif op == "parameter":
+                if c is entry:
+                    reaches_param = True
+            elif op == "get-tuple-element":
+                m = _GTE_INDEX_RE.search(nxt.attrs)
+                idx = int(m.group(1)) if m else None
+                src = c.instructions.get(
+                    nxt.operands[0].lstrip("%")) if nxt.operands else None
+                if src is None or idx is None:
+                    continue
+                if src.opcode == "while":
+                    for cname in src.called_computations():
+                        sub = module.computations.get(cname)
+                        if sub is None:
+                            continue
+                        root = next((sub.instructions[n] for n in sub.order
+                                     if sub.instructions[n].is_root), None)
+                        if root is not None and root.opcode == "tuple" \
+                                and idx < len(root.operands):
+                            queue.append((sub, _Hop(root.operands[idx])))
+                    init = c.instructions.get(
+                        src.operands[0].lstrip("%")) if src.operands else None
+                    if init is not None and init.opcode == "tuple" \
+                            and idx < len(init.operands):
+                        queue.append((c, _Hop(init.operands[idx])))
+                elif src.opcode == "tuple" and idx < len(src.operands):
+                    queue.append((c, _Hop(src.operands[idx])))
+                else:
+                    queue.append((c, nxt))
+            elif op in _PROVENANCE_CHAIN:
+                queue.append((c, nxt))
+            # anything else (dot, fusion, …) is real compute: provenance
+            # ends — an all-gather of *that* is an activation reshard
+    return reaches_param, reduce_scatters
+
+
+class _Hop:
+    """Synthetic single-operand node so the walk can enqueue 'continue at
+    this operand name' without duplicating expansion logic."""
+
+    __slots__ = ("name", "opcode", "operands", "attrs")
+
+    def __init__(self, operand: str):
+        self.name = f"hop:{operand}"
+        self.opcode = "copy"
+        self.operands = [operand]
+        self.attrs = ""
+
+
+@register_pass("exposed-collectives")
+class ExposedCollectivesPass(AnalysisPass):
+    """Flag collectives whose transfer the schedule does not hide.
+
+    A collective is *exposed* when the async-schedule model (committed
+    ``*-start``/``*-done`` spans, or the async-runtime simulation for
+    synchronous schedules) finds too little concurrent compute/other-link
+    work to hide its alpha-beta transfer time.  A blocking gradient sync
+    fires this pass; the bucketed ``psum_start``/``psum_wait`` overlap
+    pipeline must make it go quiet.
+
+    Per-instance knobs: ``threshold_frac`` — exposed fraction of wire
+    bytes above which an instance is flagged; ``min_bytes`` — ignore
+    instances with less wire traffic (control-flow tokens, tiny scale
+    factors); ``min_comm_s`` — ignore instances cheaper than this even
+    when fully exposed; ``severity`` — finding severity.
+
+    Aggregate knobs: ``link`` — restrict the pass to one link class
+    (``"ici"``/``"dci"``; empty = all); ``total_budget_s`` — when > 0,
+    additionally emit one summary finding if the *total* exposed seconds
+    over the considered instances exceed the budget.  At smoke scale
+    individual instances look alike between a blocking and an overlapped
+    schedule; the aggregate DCI exposure is what separates them (set
+    ``threshold_frac`` above 1 to gate on the aggregate alone).
+    """
+
+    KNOBS = {"threshold_frac": 0.2, "min_bytes": 1 << 14,
+             "min_comm_s": 0.0, "link": "", "total_budget_s": 0.0,
+             "severity": "warn"}
+
+    def run(self, ctx):
+        out = []
+        if ctx.stats is None:
+            return out
+        thr = float(self.knobs["threshold_frac"])
+        min_bytes = float(self.knobs["min_bytes"])
+        min_comm = float(self.knobs["min_comm_s"])
+        only_link = str(self.knobs["link"]).strip().lower()
+        budget = float(self.knobs["total_budget_s"])
+        total_exposed_s = 0.0
+        total_wire = 0.0
+        n_considered = 0
+        for inst in ctx.stats.collective_instances:
+            wire = float(inst.get("wire_bytes", 0.0))
+            comm = float(inst.get("comm_s", 0.0))
+            link = inst.get("link", "ici")
+            if only_link and link != only_link:
+                continue
+            if wire < min_bytes or comm <= 0.0 or comm < min_comm:
+                continue
+            exposed_b = float(inst.get("exposed_bytes", wire))
+            frac = exposed_b / wire if wire > 0 else 0.0
+            hidden_s = float(inst.get("hidden_s", 0.0))
+            exposed_s = max(comm - hidden_s, 0.0)
+            mult = float(inst.get("mult", 1.0))
+            total_exposed_s += exposed_s * mult
+            total_wire += wire * mult
+            n_considered += 1
+            if frac <= thr:
+                continue
+            out.append(self.finding(
+                str(self.knobs["severity"]),
+                f"{inst['opcode']} {inst['name']!r} exposes "
+                f"{frac:.0%} of its {wire / 1e6:.2f} MB wire traffic "
+                f"({exposed_s * 1e6:.0f} us/instance x{mult:.0f} on "
+                f"{link.upper()})",
+                opcode=inst["opcode"], instruction=inst["name"],
+                computation=inst.get("computation", ""),
+                op_name=inst.get("op_name", ""),
+                bytes_impact=exposed_b * mult,
+                seconds_impact=exposed_s * mult,
+                fix_hint="overlap it: issue the collective earlier "
+                         "(psum_start/psum_wait bucketing, overlap_sync="
+                         "True) or aggregate small messages so the "
+                         "alpha cost amortizes",
+                data={"exposed_frac": frac, "wire_bytes": wire,
+                      "comm_s": comm, "hidden_s": hidden_s,
+                      "link": link, "mult": mult}))
+        link_tag = only_link.upper() if only_link else "all links"
+        ctx.meta[f"exposed_s:{only_link or 'all'}"] = total_exposed_s
+        if budget > 0.0 and total_exposed_s > budget:
+            out.append(self.finding(
+                str(self.knobs["severity"]),
+                f"aggregate exposed collective time on {link_tag} is "
+                f"{total_exposed_s * 1e6:.1f} us across {n_considered} "
+                f"instance(s) — over the {budget * 1e6:.1f} us budget",
+                opcode="", instruction=f"total[{only_link or 'all'}]",
+                bytes_impact=total_wire,
+                seconds_impact=total_exposed_s,
+                fix_hint="the schedule is not hiding its gradient sync: "
+                         "enable the bucketed overlap pipeline "
+                         "(overlap_sync=True) or raise total_budget_s if "
+                         "this config's exposure is accepted",
+                data={"total_exposed_s": total_exposed_s,
+                      "budget_s": budget, "link": only_link or "all",
+                      "n_instances": n_considered}))
+        ctx.meta["exposed_collective_s"] = ctx.stats.exposed_collective_s
+        return out
+
+
+@register_pass("implicit-reshard")
+class ImplicitReshardPass(AnalysisPass):
+    """Flag reshard traffic the sharding rule table never asked for.
+
+    The partitioner inserts all-gathers / all-to-alls / permutes whenever
+    an operand's layout does not match what an op needs.  Most are
+    *intended* (ZeRO parameter gathers, expert dispatch, pipeline shifts
+    — see ``repro.dist.sharding.intended_collectives``); one wrong
+    annotation makes GSPMD silently bounce whole activations between
+    layouts every layer.  This pass decodes each reshard collective's
+    replica groups onto mesh axes and reports any span the intent table
+    does not cover.
+
+    All-gathers get two provenance-based allowances (via a bounded
+    upstream-dataflow walk that threads through while-loop carries):
+
+    * a gather whose provenance roots at an entry ``parameter`` is the
+      partitioner's chosen implementation of a sharded weight (e.g.
+      all-gathering a TP-sharded embedding table before its lookup) —
+      allowed over any axis some ``p_*`` rule shards over;
+    * a gather whose provenance contains a ``reduce-scatter`` over the
+      *same* axes is the tail of an all-reduce XLA decomposed around the
+      microbatch loop (reduce-scatter inside, all-gather on the
+      loop-carried accumulator) — intended reduction traffic.
+
+    Activation reshards get neither pass: their provenance ends at real
+    compute (dot/fusion), and they are exactly the mis-sharding signal
+    this lint exists for.
+
+    Knobs: ``min_bytes`` — ignore tiny reshards; ``allow_axes`` — extra
+    allowed axis sets, ``"+"``-separated (e.g. ``"model+data,model"``
+    allows {model,data} and {model}); ``severity``.
+    """
+
+    KNOBS = {"min_bytes": 1 << 12, "allow_axes": "", "severity": "warn"}
+
+    def run(self, ctx):
+        out = []
+        if ctx.stats is None or ctx.module is None or not ctx.mesh_axes:
+            return out          # no topology to judge against
+        from ..dist.sharding import (RESHARD_OPCODES, axes_of_replica_groups,
+                                     intended_collectives)
+        intended = intended_collectives(rules=ctx.rules or None,
+                                        mesh_axes=ctx.mesh_axes,
+                                        kind=ctx.kind)
+        extra = set()
+        for seg in str(self.knobs["allow_axes"]).split(","):
+            seg = seg.strip()
+            if seg:
+                extra.add(frozenset(a.strip() for a in seg.split("+")))
+        min_bytes = float(self.knobs["min_bytes"])
+        present = {a for a, s in ctx.mesh_axes.items() if int(s) > 1}
+        param_axes: set = set()
+        for key, val in (ctx.rules or {}).items():
+            if key.startswith("p_") and val is not None:
+                cand = (val,) if isinstance(val, str) else tuple(val)
+                param_axes |= {a for a in cand if a in present}
+        for inst in ctx.stats.collective_instances:
+            op = inst["opcode"]
+            if op not in RESHARD_OPCODES:
+                continue
+            if float(inst.get("wire_bytes", 0.0)) < min_bytes:
+                continue
+            if _explicitly_requested(inst.get("op_name", "")):
+                continue        # user wrote this collective (shard_map /
+                # lax.all_gather etc.) — intended by construction; this
+                # pass only judges partitioner-inserted traffic
+            comp = ctx.module.computations.get(inst.get("computation", ""))
+            ins = comp.instructions.get(inst["name"]) if comp else None
+            if ins is None:
+                continue
+            groups = ins.replica_groups()
+            axes = axes_of_replica_groups(groups, ctx.mesh_axes)
+            if axes is None:
+                # hand-written topology (shard_map ring etc.): can't be an
+                # accident of the rule table — skip with a counted note
+                ctx.meta["reshard_unclassified"] = \
+                    ctx.meta.get("reshard_unclassified", 0) + 1
+                continue
+            allowed = set(intended.get(op, set())) | extra
+            if any(axes <= a for a in allowed):
+                continue
+            if op == "all-gather":
+                reaches_param, rss = _upstream_evidence(ctx.module, comp, ins)
+                if axes <= param_axes and reaches_param:
+                    continue    # sharded-weight gather, compiler's choice
+                if any(axes_of_replica_groups(rs.replica_groups(),
+                                              ctx.mesh_axes) == axes
+                       for rs in rss):
+                    # tail of an all-reduce XLA decomposed into
+                    # reduce-scatter (inside the microbatch loop) +
+                    # all-gather (on the loop-carried accumulator):
+                    # intended reduction traffic, not a reshard
+                    continue
+            mult = float(inst.get("mult", 1.0))
+            wire = float(inst.get("wire_bytes", 0.0))
+            out.append(self.finding(
+                str(self.knobs["severity"]),
+                f"partitioner inserted {op} {inst['name']!r} over mesh "
+                f"axes {{{', '.join(sorted(axes))}}} — "
+                f"{wire / 1e6:.2f} MB x{mult:.0f} the rule table never "
+                f"intended",
+                opcode=op, instruction=inst["name"],
+                computation=inst.get("computation", ""),
+                op_name=inst.get("op_name", ""),
+                bytes_impact=wire * mult,
+                seconds_impact=float(inst.get("comm_s", 0.0)) * mult,
+                fix_hint="a layer is mis-sharded: fix the logical-axis "
+                         "annotation or extend the rule table in "
+                         "repro.dist.sharding (then accept via the "
+                         "baseline file if the reshard is deliberate)",
+                data={"axes": sorted(axes), "wire_bytes": wire,
+                      "mult": mult,
+                      "intended": [sorted(a) for a in sorted(
+                          allowed, key=sorted)]}))
+        return out

@@ -1,0 +1,170 @@
+"""dtype-promotion lint: f32 leaks inside bf16 / int8-quantized paths.
+
+Two complementary views:
+
+  * **jaxpr** (pre-lowering, when the driver supplies ``ctx.jaxprs``) —
+    where intent is still visible.  Flags (a) elementwise ops whose output
+    silently promotes to f32 because one operand is a strong-typed f32
+    tensor in an otherwise-narrow path (the classic leak: an ``np.float32``
+    constant in a bf16 layer), and (b) large explicit upcasts
+    (``convert_element_type`` narrow→f32) above ``min_numel``.
+  * **HLO** (post-lowering) — large narrow→f32 ``convert`` instructions
+    anywhere in the module (fusion bodies included).  ``min_numel``
+    filters the per-group f32 scale factors the quantized collectives
+    produce on purpose, and the wholesale convert pairs XLA:CPU's bf16
+    legalization inserts at smoke scale.
+
+Reduction accumulators are *supposed* to be f32; converts feeding only
+reduces are exempt via ``allow_reduce``.
+"""
+
+from __future__ import annotations
+
+import re
+
+from ..core.hlo import _SHAPE_RE, shape_numel
+from .base import AnalysisPass, register_pass
+
+#: dtypes a quantized/mixed-precision path is allowed to stay in
+NARROW = {"bf16", "f16", "s8", "u8", "s4", "u4", "s2", "u2",
+          "f8e4m3fn", "f8e5m2", "f8e4m3b11fnuz", "f8e4m3fnuz",
+          "f8e5m2fnuz", "f8e3m4", "f8e4m3", "f8e8m0fnu"}
+WIDE = {"f32", "f64"}
+
+#: jaxpr dtype-name → HLO dtype-name (the subset we care about)
+_JAX_NARROW = {"bfloat16", "float16", "int8", "uint8", "int4", "uint4",
+               "float8_e4m3fn", "float8_e5m2"}
+_JAX_WIDE = {"float32", "float64"}
+
+_ELEMENTWISE_PRIMS = {"add", "sub", "mul", "div", "max", "min", "pow",
+                      "atan2", "nextafter", "rem"}
+
+
+def _dtype_of(shape_str: str) -> str:
+    m = _SHAPE_RE.search(shape_str)
+    return m.group(1) if m else ""
+
+
+@register_pass("dtype-promotion")
+class DtypePromotionPass(AnalysisPass):
+    KNOBS = {"min_numel": 1 << 20, "min_numel_jaxpr": 1 << 10,
+             "allow_reduce": True, "severity": "warn"}
+
+    # ------------------------------------------------------------ HLO side
+    def _run_hlo(self, ctx) -> list:
+        out = []
+        if ctx.module is None:
+            return out
+        min_numel = int(self.knobs["min_numel"])
+        for cname, comp in ctx.module.computations.items():
+            for iname in comp.order:
+                ins = comp.instructions[iname]
+                if ins.opcode != "convert":
+                    continue
+                src = _dtype_of(comp.shape_of(ins.operands[0])
+                                if ins.operands else "")
+                dst = _dtype_of(ins.shape)
+                if src not in NARROW or dst not in WIDE:
+                    continue
+                numel = shape_numel(ins.shape)
+                if numel < min_numel:
+                    continue
+                if self.knobs["allow_reduce"] and self._feeds_reduce(
+                        comp, iname):
+                    continue
+                byts = numel * (4 if dst == "f32" else 8)
+                out.append(self.finding(
+                    str(self.knobs["severity"]),
+                    f"{src}→{dst} promotion of {numel:,} elements "
+                    f"({byts / 1e6:.2f} MB materialized) in {cname!r}",
+                    opcode="convert", instruction=iname, computation=cname,
+                    op_name=self._op_name(ins),
+                    bytes_impact=float(byts),
+                    fix_hint="keep the quantized path narrow: compute in "
+                             f"{src} (or fuse the upcast into the "
+                             "consuming reduction) instead of "
+                             "materializing a wide copy",
+                    data={"src": src, "dst": dst, "numel": numel}))
+        return out
+
+    @staticmethod
+    def _op_name(ins) -> str:
+        m = re.search(r'op_name="([^"]*)"', ins.attrs)
+        return m.group(1) if m else ""
+
+    @staticmethod
+    def _feeds_reduce(comp, name: str) -> bool:
+        users = [si for iname in comp.order
+                 for si in (comp.instructions[iname],)
+                 if name in si.operands]
+        return bool(users) and all(
+            si.opcode in ("reduce", "reduce-window", "all-reduce",
+                          "reduce-scatter") for si in users)
+
+    # ---------------------------------------------------------- jaxpr side
+    def _run_jaxprs(self, ctx) -> list:
+        out = []
+        for label, jx in ctx.jaxprs:
+            try:
+                self._walk_jaxpr(label, jx, out, set())
+            except Exception:                               # noqa: BLE001
+                ctx.meta["jaxpr_walk_errors"] = \
+                    ctx.meta.get("jaxpr_walk_errors", 0) + 1
+        return out
+
+    def _walk_jaxpr(self, label, jx, out, seen) -> None:
+        jx = getattr(jx, "jaxpr", jx)       # ClosedJaxpr → Jaxpr
+        if id(jx) in seen or not hasattr(jx, "eqns"):
+            return
+        seen.add(id(jx))
+        min_numel = int(self.knobs["min_numel_jaxpr"])
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                        self._walk_jaxpr(label, sub, out, seen)
+            ovals = [getattr(v, "aval", None) for v in eqn.outvars]
+            oval = ovals[0] if ovals else None
+            odt = str(getattr(oval, "dtype", ""))
+            if odt not in _JAX_WIDE:
+                continue
+            numel = 1
+            for d in getattr(oval, "shape", ()):
+                numel *= int(d)
+            ivals = [getattr(v, "aval", None) for v in eqn.invars]
+            narrow_in = [a for a in ivals
+                         if str(getattr(a, "dtype", "")) in _JAX_NARROW]
+            if not narrow_in:
+                continue
+            if prim == "convert_element_type":
+                if numel < min_numel:
+                    continue
+                msg = (f"explicit {narrow_in[0].dtype}→{odt} upcast of "
+                       f"{numel:,} elements in jaxpr {label!r}")
+                hint = ("dequantize lazily inside the consumer instead of "
+                        "materializing the wide tensor")
+            elif prim in _ELEMENTWISE_PRIMS:
+                # a strong f32 operand dragged a narrow path wide
+                wide_in = [a for a in ivals
+                           if str(getattr(a, "dtype", "")) in _JAX_WIDE
+                           and not getattr(a, "weak_type", False)]
+                if not wide_in:
+                    continue
+                msg = (f"implicit promotion: {prim} mixes "
+                       f"{narrow_in[0].dtype} with strong f32 → {odt} "
+                       f"({numel:,} elements) in jaxpr {label!r}")
+                hint = ("cast the f32 operand down (or make it a weak "
+                        "python scalar); the whole downstream path now "
+                        "runs wide")
+            else:
+                continue
+            out.append(self.finding(
+                str(self.knobs["severity"]), msg,
+                opcode=prim, instruction=prim, computation=label,
+                bytes_impact=float(numel * 4),
+                fix_hint=hint,
+                data={"numel": numel, "dtype": odt}))
+
+    def run(self, ctx):
+        return self._run_hlo(ctx) + self._run_jaxprs(ctx)

@@ -1,0 +1,249 @@
+"""Buffer-level lint passes: static peak-HBM estimate + host-sync audit.
+
+``peak-memory`` runs a liveness analysis over the scheduled entry
+computation — each instruction's output buffer is live from its definition
+to its last consumer, parameters live for the whole program, while-loop
+bodies contribute their internal transient peak on top of the live set at
+the loop — and checks the resulting peak against the per-device HBM
+budget the roofline model uses.  This is the static half of the OOM
+gate: it prices a config *before* it burns hardware time.
+
+``host-sync`` flags forced device↔host round-trips (infeed/outfeed,
+host transfers, host custom-calls) and missed donations: a large entry
+parameter whose shape reappears in the root outputs but is not in the
+module's ``input_output_alias`` map is a state buffer XLA must
+double-buffer — 2× residency and a copy on every step.
+"""
+
+from __future__ import annotations
+
+import re
+
+from ..core.hlo import (_FREE_OPCODES, _SHAPE_RE, _TRANSPARENT, Computation,
+                        HloModule, shape_bytes)
+from .base import AnalysisPass, register_pass
+
+
+def _norm_shape(shape_str: str) -> tuple:
+    """Layout-insensitive (dtype, dims) tuples of a shape string."""
+    return tuple(_SHAPE_RE.findall(shape_str))
+
+
+# ---------------------------------------------------------------------------
+# liveness
+# ---------------------------------------------------------------------------
+
+def _buffer_bytes(ins) -> float:
+    """Bytes a top-level instruction's *output* occupies.  Aliasing /
+    layout-only ops and tuples own no storage of their own."""
+    if ins.opcode in _TRANSPARENT or ins.opcode in (
+            "tuple", "get-tuple-element", "parameter"):
+        return 0.0
+    if ins.opcode in _FREE_OPCODES:
+        return 0.0
+    return float(shape_bytes(ins.shape))
+
+
+def estimate_peak_bytes(module: HloModule, comp: Computation | None = None,
+                        default_trip: int = 1, _depth: int = 0) -> dict:
+    """Static peak-HBM estimate of one execution of ``comp`` (default: the
+    entry computation).
+
+    Returns ``{"peak_bytes", "persistent_bytes", "transient_peak_bytes",
+    "at_instruction"}``.  ``persistent_bytes`` is parameters + constants
+    (live throughout); the transient peak tracks intermediate buffers via
+    def/last-use liveness, descending into while/call/conditional bodies
+    (× nothing — a loop's transient peak is per-iteration) and charging
+    fusions only their materialized outputs.
+    """
+    if comp is None:
+        comp = module.entry_computation()
+    persistent = 0.0
+    for iname in comp.order:
+        ins = comp.instructions[iname]
+        if ins.opcode in ("parameter", "constant"):
+            persistent += float(shape_bytes(ins.shape))
+
+    last_use = {}
+    pos = {n: i for i, n in enumerate(comp.order)}
+    end = len(comp.order)
+    for iname in comp.order:
+        ins = comp.instructions[iname]
+        for o in ins.operands:
+            o = o.lstrip("%")
+            if o in pos:
+                last_use[o] = pos[iname]
+        if ins.is_root:
+            last_use[iname] = end
+
+    live = 0.0
+    peak = 0.0
+    at = ""
+    frees: dict = {}
+    for i, iname in enumerate(comp.order):
+        for nm in frees.pop(i, ()):       # buffers whose last use was < i
+            live -= nm
+        ins = comp.instructions[iname]
+        b = _buffer_bytes(ins)
+        live += b
+        here = live
+        if _depth < 8 and ins.opcode in ("while", "call", "conditional"):
+            sub_peaks = []
+            for c in ins.called_computations():
+                sub = module.computations.get(c)
+                if sub is not None and sub is not comp:
+                    sp = estimate_peak_bytes(module, sub, default_trip,
+                                             _depth + 1)
+                    sub_peaks.append(sp["transient_peak_bytes"])
+            if sub_peaks:
+                here += max(sub_peaks)
+        if here > peak:
+            peak = here
+            at = iname
+        lu = last_use.get(iname, i)       # unused value dies immediately
+        if b > 0.0:
+            frees.setdefault(max(lu, i) + 1, []).append(b)
+    transient = peak
+    return {"peak_bytes": persistent + transient,
+            "persistent_bytes": persistent,
+            "transient_peak_bytes": transient,
+            "at_instruction": at}
+
+
+@register_pass("peak-memory")
+class PeakMemoryPass(AnalysisPass):
+    """Static peak-HBM estimate vs. the device budget.
+
+    Always publishes ``peak_bytes_est`` into the report meta (the CI
+    lint-grid compares it against the dry-run measured peak); emits a
+    finding only when the estimate exceeds ``budget_frac`` of the budget
+    (``ctx.device_budget`` or ``hw["hbm_bytes"]``).
+    """
+
+    KNOBS = {"budget_frac": 0.92, "severity": "error"}
+
+    def run(self, ctx):
+        if ctx.module is None or not ctx.module.computations:
+            return []
+        est = estimate_peak_bytes(ctx.module,
+                                  default_trip=ctx.default_trip)
+        ctx.meta["peak_bytes_est"] = est["peak_bytes"]
+        ctx.meta["peak_persistent_bytes"] = est["persistent_bytes"]
+        ctx.meta["peak_at_instruction"] = est["at_instruction"]
+        budget = ctx.budget_bytes
+        if not budget:
+            return []
+        ctx.meta["peak_budget_bytes"] = budget
+        frac = float(self.knobs["budget_frac"])
+        if est["peak_bytes"] <= frac * budget:
+            return []
+        over = est["peak_bytes"] - frac * budget
+        return [self.finding(
+            str(self.knobs["severity"]),
+            f"static peak HBM estimate {est['peak_bytes'] / 2**30:.2f} GiB "
+            f"exceeds {frac:.0%} of the {budget / 2**30:.1f} GiB device "
+            f"budget (peak at {est['at_instruction']!r})",
+            opcode="liveness", instruction=est["at_instruction"],
+            computation=ctx.module.entry,
+            bytes_impact=over,
+            fix_hint="shard the heaviest live buffers (FSDP the params, "
+                     "microbatch the activations) or raise "
+                     "remat/offload before this config OOMs on hardware",
+            data=est)]
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+#: opcodes that force a device<->host round trip / pipeline bubble
+_HOST_OPCODES = {"infeed", "outfeed", "send", "recv",
+                 "send-done", "recv-done"}
+_HOST_CUSTOM_RE = re.compile(
+    r'custom_call_target="([^"]*(?:[Hh]ost|[Cc]allback|Pin|'
+    r'annotate_device_placement)[^"]*)"')
+
+
+@register_pass("host-sync")
+class HostSyncPass(AnalysisPass):
+    KNOBS = {"min_donate_bytes": 1 << 20, "severity": "warn"}
+
+    def run(self, ctx):
+        out = []
+        if ctx.module is None or not ctx.module.computations:
+            return out
+        for cname, comp in ctx.module.computations.items():
+            for iname in comp.order:
+                ins = comp.instructions[iname]
+                hit = ""
+                if ins.opcode in _HOST_OPCODES:
+                    hit = ins.opcode
+                elif "is_host_transfer=true" in ins.attrs:
+                    hit = f"{ins.opcode} (host transfer)"
+                elif ins.opcode == "custom-call":
+                    m = _HOST_CUSTOM_RE.search(ins.attrs)
+                    if m:
+                        hit = f"custom-call {m.group(1)}"
+                if not hit:
+                    continue
+                byts = float(max(shape_bytes(ins.shape),
+                                 sum(shape_bytes(comp.shape_of(o))
+                                     for o in ins.operands)))
+                out.append(self.finding(
+                    str(self.knobs["severity"]),
+                    f"{hit} in {cname!r} forces a device-host sync "
+                    f"({byts / 1e6:.2f} MB)",
+                    opcode=ins.opcode, instruction=iname, computation=cname,
+                    bytes_impact=byts,
+                    fix_hint="hot paths must stay on device: move the "
+                             "callback/transfer off the step or batch it "
+                             "behind an async copy",
+                    data={"target": hit}))
+        out.extend(self._missed_donations(ctx))
+        return out
+
+    def _missed_donations(self, ctx) -> list:
+        """Large state-shaped inputs that are not donated: every step pays
+        a copy and double residency."""
+        out = []
+        module = ctx.module
+        entry = module.entry_computation()
+        aliased = getattr(module, "aliased_params", None)
+        if aliased is None:
+            return out          # artifact carries no alias info: skip
+        root = next((entry.instructions[n] for n in entry.order
+                     if entry.instructions[n].is_root), None)
+        if root is None:
+            return out
+        if root.opcode == "tuple":
+            out_shapes = {_norm_shape(entry.shape_of(o))
+                          for o in root.operands}
+        else:
+            out_shapes = {_norm_shape(root.shape)}
+        min_bytes = float(self.knobs["min_donate_bytes"])
+        for iname in entry.order:
+            ins = entry.instructions[iname]
+            if ins.opcode != "parameter" or not ins.operands:
+                continue
+            try:
+                pidx = int(ins.operands[0])
+            except ValueError:
+                continue
+            byts = float(shape_bytes(ins.shape))
+            if byts < min_bytes or pidx in aliased:
+                continue
+            if _norm_shape(ins.shape) not in out_shapes:
+                continue
+            out.append(self.finding(
+                str(self.knobs["severity"]),
+                f"parameter {iname!r} ({byts / 2**20:.1f} MiB) matches an "
+                f"output shape but is not donated — XLA double-buffers it "
+                f"and copies every step",
+                opcode="parameter", instruction=iname,
+                computation=entry.name,
+                bytes_impact=byts,
+                fix_hint="donate the state argument "
+                         "(jax.jit(..., donate_argnums=...)) so the "
+                         "update happens in place",
+                data={"param_index": pidx}))
+        return out

@@ -51,6 +51,8 @@ class EventKind(enum.Enum):
     REGION_END = "region_end"
     STEP_START = "step_start"
     STEP_END = "step_end"
+    FINDING = "finding"                    # static-analysis lint finding
+                                           # (repro.analysis pass output)
 
 
 #: stable integer codes for the columnar ``kind`` column

@@ -73,6 +73,25 @@ _ARITH_OPCODES = {
     "not", "shift-left", "shift-right-logical", "shift-right-arithmetic",
 }
 
+# structural / data-movement opcodes the rollup handles generically; an
+# opcode outside _FREE/_ARITH/these (and not a collective) is still
+# processed as a generic kernel but counted under
+# ``stats.warnings["unknown-opcode:<op>"]`` so truncated or future-XLA
+# dumps degrade visibly instead of silently
+_KNOWN_OPCODES = {
+    "broadcast", "reshape", "transpose", "slice", "concatenate", "pad",
+    "copy", "copy-start", "copy-done", "convert", "reverse", "dot",
+    "convolution", "fusion", "reduce", "map", "scatter", "reduce-window",
+    "select-and-scatter", "sort", "while", "call", "conditional",
+    "custom-call", "rng", "rng-bit-generator", "rng-get-and-update-state",
+    "dynamic-slice", "dynamic-update-slice", "gather", "domain",
+    "bitcast-convert", "get-dimension-size", "set-dimension-size",
+    "cholesky", "triangular-solve", "fft", "clz", "popcnt", "is-finite",
+    "real", "imag", "complex", "stochastic-convert", "infeed", "outfeed",
+    "send", "recv", "send-done", "recv-done", "async-start",
+    "async-update", "async-done", "add-dependency",
+} | _FREE_OPCODES | _ARITH_OPCODES
+
 
 def shape_bytes(shape_str: str) -> int:
     """Total bytes of an HLO shape string (handles tuples)."""
@@ -84,7 +103,8 @@ def shape_bytes(shape_str: str) -> int:
         numel = 1
         if dims:
             for d in dims.split(","):
-                numel *= int(d)
+                if d:           # tolerate truncated dim lists ("2,3,")
+                    numel *= int(d)
         total += numel * bits // 8
     return total
 
@@ -95,7 +115,8 @@ def shape_numel(shape_str: str) -> int:
         numel = 1
         if dims:
             for d in dims.split(","):
-                numel *= int(d)
+                if d:
+                    numel *= int(d)
         numel_total += numel
     return numel_total
 
@@ -105,7 +126,7 @@ def _first_shape_dims(shape_str: str) -> list:
     if not m:
         return []
     dims = m.group(2)
-    return [int(d) for d in dims.split(",")] if dims else []
+    return [int(d) for d in dims.split(",") if d] if dims else []
 
 
 @dataclasses.dataclass
@@ -186,9 +207,18 @@ class Computation:
 class HloModule:
     computations: dict          # name -> Computation
     entry: str
+    #: param numbers donated via the module's input_output_alias header
+    aliased_params: set = dataclasses.field(default_factory=set)
+    #: counted parser warnings (malformed lines skipped, never raised)
+    parse_warnings: dict = dataclasses.field(default_factory=dict)
 
     def entry_computation(self) -> Computation:
         return self.computations[self.entry]
+
+
+#: ``input_output_alias={ {0}: (0, {}, may-alias), ... }`` header entries:
+#: capture (output index tuple, parameter number)
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d,\s]*\}:\s*\((\d+)")
 
 
 def _split_balanced(s: str, opener: str = "(", closer: str = ")") -> tuple:
@@ -215,9 +245,24 @@ def parse_hlo(text: str) -> HloModule:
     computations: dict = {}
     entry = None
     cur: Computation | None = None
+    aliased: set = set()
+    warnings: dict = {}
+
+    def warn(key: str) -> None:
+        warnings[key] = warnings.get(key, 0) + 1
+
     for raw in text.splitlines():
         line = raw.rstrip()
         if not line:
+            continue
+        if cur is None and line.lstrip().startswith("HloModule"):
+            m = re.search(r"input_output_alias=\{(.*?)\}\s*(?:,|$)",
+                          line)
+            if m is None:
+                m = re.search(r"input_output_alias=\{(.*)", line)
+            if m:
+                aliased.update(int(p) for p in
+                               _ALIAS_ENTRY_RE.findall(m.group(1)))
             continue
         hdr = _COMP_HDR.match(line)
         if hdr and " = " not in line.split("{")[0]:
@@ -242,10 +287,14 @@ def parse_hlo(text: str) -> HloModule:
             shape = "(" + shape + ")"
         else:
             sp = rhs.find(" ")
+            if sp < 0:                      # truncated line: no opcode part
+                warn("malformed-instruction")
+                continue
             shape, rest = rhs[:sp], rhs[sp:]
         rest = rest.strip()
         sp = rest.find("(")
         if sp < 0:
+            warn("malformed-instruction")
             continue
         opcode = rest[:sp].strip()
         inside, attrs = _split_balanced(rest[sp - 1:] if rest[sp - 1] == "(" else rest)
@@ -285,7 +334,10 @@ def parse_hlo(text: str) -> HloModule:
                 entry = cname
         if entry is None and computations:
             entry = list(computations)[-1]
-    return HloModule(computations, entry)
+    if not computations:
+        warn("empty-module")
+    return HloModule(computations, entry, aliased_params=aliased,
+                     parse_warnings=warnings)
 
 
 # --------------------------------------------------------------------------
@@ -338,6 +390,9 @@ class HloStats:
     kernel_counts: dict = dataclasses.field(default_factory=dict)
     kernel_meta: dict = dataclasses.field(default_factory=dict)
     hw: dict = dataclasses.field(default_factory=dict)
+    #: counted analysis warnings (parser skips, unknown opcodes,
+    #: per-instruction visit errors) — populated, never raised
+    warnings: dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_collective_bytes(self) -> float:
@@ -784,6 +839,16 @@ def analyze(module: HloModule, default_trip: int = 1,
     if hw is None:
         hw = _default_hw()
     stats = HloStats(hw=dict(hw))
+
+    def warn(key: str, n: int = 1) -> None:
+        stats.warnings[key] = stats.warnings.get(key, 0) + n
+
+    for k, v in getattr(module, "parse_warnings", {}).items():
+        warn(k, v)
+    if not module.computations or module.entry not in module.computations:
+        if "empty-module" not in stats.warnings:
+            warn("empty-module")
+        return stats
     flop_memo: dict = {}
     pos_memo: dict = {}
     window_memo: dict = {}
@@ -819,81 +884,92 @@ def analyze(module: HloModule, default_trip: int = 1,
     def visit(comp: Computation, mult: float, top_level: bool):
         for iname in comp.order:
             ins = comp.instructions[iname]
-            if _is_collective_done(ins.opcode):
-                continue        # paired with its *-start; no payload, free
-            base = _base_collective(ins.opcode)
-            if base is not None:
-                op_bytes = sum(shape_bytes(comp.shape_of(o)) for o in ins.operands)
-                if op_bytes == 0:                 # e.g. unresolved operand
-                    op_bytes = ins.out_bytes()
-                stats.collective_bytes[base] = (
-                    stats.collective_bytes.get(base, 0.0) + op_bytes * mult)
-                group = ins.replica_group_size()
-                wire = collective_wire_bytes(base, op_bytes,
-                                             ins.out_bytes(), group)
-                stats.collective_wire_bytes[base] = (
-                    stats.collective_wire_bytes.get(base, 0.0) + wire * mult)
-                mo = re.search(r'op_name="([^"]*)"', ins.attrs)
-                stats.collective_instances.append({
-                    "opcode": base, "name": ins.name, "bytes": op_bytes,
-                    "mult": mult, "group_size": group,
-                    "computation": comp.name, "wire_bytes": wire,
-                    "op_name": mo.group(1) if mo else "",
-                    **overlap_of(comp, ins, wire),
-                })
-            if ins.opcode == "while":
-                trip = ins.trip_count() or default_trip
+            try:
+                visit_one(comp, ins, mult, top_level)
+            except Exception:                               # noqa: BLE001
+                # a malformed instruction must not sink the whole rollup —
+                # skip it, count it, keep walking
+                warn(f"instr-error:{ins.opcode}")
+
+    def visit_one(comp: Computation, ins: Instruction, mult: float,
+                  top_level: bool):
+        if _is_collective_done(ins.opcode):
+            return              # paired with its *-start; no payload, free
+        base = _base_collective(ins.opcode)
+        if base is None and ins.opcode not in _KNOWN_OPCODES:
+            warn(f"unknown-opcode:{ins.opcode}")
+        if base is not None:
+            op_bytes = sum(shape_bytes(comp.shape_of(o)) for o in ins.operands)
+            if op_bytes == 0:                 # e.g. unresolved operand
+                op_bytes = ins.out_bytes()
+            stats.collective_bytes[base] = (
+                stats.collective_bytes.get(base, 0.0) + op_bytes * mult)
+            group = ins.replica_group_size()
+            wire = collective_wire_bytes(base, op_bytes,
+                                         ins.out_bytes(), group)
+            stats.collective_wire_bytes[base] = (
+                stats.collective_wire_bytes.get(base, 0.0) + wire * mult)
+            mo = re.search(r'op_name="([^"]*)"', ins.attrs)
+            stats.collective_instances.append({
+                "opcode": base, "name": ins.name, "bytes": op_bytes,
+                "mult": mult, "group_size": group,
+                "computation": comp.name, "wire_bytes": wire,
+                "op_name": mo.group(1) if mo else "",
+                **overlap_of(comp, ins, wire),
+            })
+        if ins.opcode == "while":
+            trip = ins.trip_count() or default_trip
+            for c in ins.called_computations():
+                sub = module.computations.get(c)
+                if sub is not None:
+                    visit(sub, mult * trip, top_level)
+            return
+        if ins.opcode in ("call", "conditional", "async-start"):
+            for c in ins.called_computations():
+                sub = module.computations.get(c)
+                if sub is not None:
+                    visit(sub, mult, top_level)
+            # fall through to count this op's traffic too (cheap)
+        if top_level:
+            if ins.opcode not in _FREE_OPCODES and base is None \
+                    and ins.opcode not in ("while",):
+                stats.kernel_counts[ins.name] = (
+                    stats.kernel_counts.get(ins.name, 0) + mult)
+                if ins.opcode == "fusion":
+                    in_bytes, ob = _fusion_io_bytes(module, comp, ins)
+                    stats.hbm_bytes += (in_bytes + ob) * mult
+                elif ins.opcode in ("dynamic-slice", "gather"):
+                    in_bytes = ins.out_bytes()
+                    stats.hbm_bytes += 2 * in_bytes * mult
+                elif ins.opcode == "dynamic-update-slice":
+                    upd = shape_bytes(comp.shape_of(ins.operands[1])
+                                      if len(ins.operands) > 1 else "")
+                    in_bytes = upd
+                    stats.hbm_bytes += 2 * upd * mult
+                else:
+                    in_bytes = sum(shape_bytes(comp.shape_of(o))
+                                   for o in ins.operands)
+                    stats.hbm_bytes += (in_bytes + ins.out_bytes()) * mult
+                if ins.name not in stats.kernel_meta:
+                    mo = re.search(r'op_name="([^"]*)"', ins.attrs)
+                    stats.kernel_meta[ins.name] = {
+                        "opcode": ins.opcode,
+                        "op_name": mo.group(1) if mo else "",
+                        "bytes": in_bytes + ins.out_bytes(),
+                    }
+            if ins.opcode == "dot":
+                stats.flops += _dot_flops(comp, ins) * mult
+            elif ins.opcode == "convolution":
+                stats.flops += _conv_flops(comp, ins) * mult
+            elif ins.opcode in _ARITH_OPCODES:
+                stats.flops += shape_numel(ins.shape) * mult
+            elif ins.opcode in ("fusion", "reduce", "map", "scatter",
+                                "reduce-window", "sort"):
                 for c in ins.called_computations():
                     sub = module.computations.get(c)
                     if sub is not None:
-                        visit(sub, mult * trip, top_level)
-                continue
-            if ins.opcode in ("call", "conditional", "async-start"):
-                for c in ins.called_computations():
-                    sub = module.computations.get(c)
-                    if sub is not None:
-                        visit(sub, mult, top_level)
-                # fall through to count this op's traffic too (cheap)
-            if top_level:
-                if ins.opcode not in _FREE_OPCODES and base is None \
-                        and ins.opcode not in ("while",):
-                    stats.kernel_counts[ins.name] = (
-                        stats.kernel_counts.get(ins.name, 0) + mult)
-                    if ins.opcode == "fusion":
-                        in_bytes, ob = _fusion_io_bytes(module, comp, ins)
-                        stats.hbm_bytes += (in_bytes + ob) * mult
-                    elif ins.opcode in ("dynamic-slice", "gather"):
-                        in_bytes = ins.out_bytes()
-                        stats.hbm_bytes += 2 * in_bytes * mult
-                    elif ins.opcode == "dynamic-update-slice":
-                        upd = shape_bytes(comp.shape_of(ins.operands[1])
-                                          if len(ins.operands) > 1 else "")
-                        in_bytes = upd
-                        stats.hbm_bytes += 2 * upd * mult
-                    else:
-                        in_bytes = sum(shape_bytes(comp.shape_of(o))
-                                       for o in ins.operands)
-                        stats.hbm_bytes += (in_bytes + ins.out_bytes()) * mult
-                    if ins.name not in stats.kernel_meta:
-                        mo = re.search(r'op_name="([^"]*)"', ins.attrs)
-                        stats.kernel_meta[ins.name] = {
-                            "opcode": ins.opcode,
-                            "op_name": mo.group(1) if mo else "",
-                            "bytes": in_bytes + ins.out_bytes(),
-                        }
-                if ins.opcode == "dot":
-                    stats.flops += _dot_flops(comp, ins) * mult
-                elif ins.opcode == "convolution":
-                    stats.flops += _conv_flops(comp, ins) * mult
-                elif ins.opcode in _ARITH_OPCODES:
-                    stats.flops += shape_numel(ins.shape) * mult
-                elif ins.opcode in ("fusion", "reduce", "map", "scatter",
-                                    "reduce-window", "sort"):
-                    for c in ins.called_computations():
-                        sub = module.computations.get(c)
-                        if sub is not None:
-                            stats.flops += _computation_flops(
-                                module, sub, flop_memo) * mult
+                        stats.flops += _computation_flops(
+                            module, sub, flop_memo) * mult
 
     visit(module.entry_computation(), 1.0, True)
 
@@ -902,8 +978,12 @@ def analyze(module: HloModule, default_trip: int = 1,
     # async-runtime model, keeping explicit *-start/*-done spans where the
     # artifact already committed to an async schedule.
     entry = module.entry_computation()
-    sim = _simulate_async_runtime(module, entry, hw, flop_memo,
-                                  pods=pods, n_devices=n_devices)
+    try:
+        sim = _simulate_async_runtime(module, entry, hw, flop_memo,
+                                      pods=pods, n_devices=n_devices)
+    except Exception:                                       # noqa: BLE001
+        warn("sim-error")
+        sim = {}
     for inst in stats.collective_instances:
         if inst["computation"] != entry.name or inst["async"]:
             continue
@@ -923,5 +1003,14 @@ def analyze(module: HloModule, default_trip: int = 1,
 def analyze_text(text: str, default_trip: int = 1, hw: dict | None = None,
                  pods: int | None = None,
                  n_devices: int | None = None) -> HloStats:
-    return analyze(parse_hlo(text), default_trip=default_trip, hw=hw,
+    """``parse_hlo`` + ``analyze`` with a no-raise guarantee: a dump the
+    parser cannot make sense of yields empty stats with
+    ``warnings={"parse-error": 1}`` instead of an exception."""
+    try:
+        module = parse_hlo(text)
+    except Exception:                                       # noqa: BLE001
+        stats = HloStats(hw=dict(hw) if hw is not None else _default_hw())
+        stats.warnings["parse-error"] = 1
+        return stats
+    return analyze(module, default_trip=default_trip, hw=hw,
                    pods=pods, n_devices=n_devices)

@@ -154,6 +154,130 @@ def logical(*axes, dims=None, rules: ShardingRules | None = None,
     return P(*spec)
 
 
+# ---------------------------------------------------------------------------
+# Static-analysis intent model (consumed by repro.analysis implicit-reshard)
+# ---------------------------------------------------------------------------
+
+def axes_of_replica_groups(groups, mesh_axes: dict):
+    """Classify a collective's replica groups onto the mesh axes they span.
+
+    ``mesh_axes`` is the *ordered* ``{axis_name: size}`` of the mesh the
+    artifact was partitioned for (device id = row-major linearization of the
+    mesh coordinates, XLA's convention for ``jax.make_mesh``).  Returns a
+    ``frozenset`` of axis names when every group is exactly a sub-grid
+    varying over those axes, else ``None`` (groups that do not align to the
+    mesh — e.g. hand-written shard_map topologies — cannot be judged
+    against the rule table and are skipped by the intent check).
+    """
+    if not groups or not mesh_axes:
+        return None
+    names = list(mesh_axes)
+    sizes = [int(mesh_axes[n]) for n in names]
+    ndev = 1
+    for s in sizes:
+        ndev *= s
+    strides = []
+    acc = 1
+    for s in reversed(sizes):
+        strides.append(acc)
+        acc *= s
+    strides.reverse()
+
+    def coords(d):
+        return tuple((d // strides[i]) % sizes[i] for i in range(len(sizes)))
+
+    varying: set = set()
+    for g in groups:
+        if any(not isinstance(d, int) or d < 0 or d >= ndev for d in g):
+            return None
+        cs = [coords(d) for d in g]
+        for dim in range(len(sizes)):
+            if len({c[dim] for c in cs}) > 1:
+                varying.add(dim)
+    expect = 1
+    for dim in varying:
+        expect *= sizes[dim]
+    if any(len(g) != expect for g in groups):
+        return None         # partial/ragged sub-grid: not a clean axis set
+    return frozenset(names[i] for i in varying)
+
+
+#: opcodes whose job is *data movement between layouts* — the reshard
+#: family the implicit-reshard pass audits (reductions are never reshards)
+RESHARD_OPCODES = ("all-gather", "all-to-all", "ragged-all-to-all",
+                   "collective-permute", "collective-broadcast")
+
+
+def intended_collectives(rules=None, mesh_axes=None, kind: str = "",
+                         mesh=None) -> dict:
+    """The reshard traffic the rule table *intends*: a map from reshard
+    opcode to the set of mesh-axis sets it may legitimately span.
+
+    Derivation (documented so a lint finding is actionable):
+
+      * **all-gather** — ZeRO/FSDP parameter gathers: axes shared between a
+        ``p_*`` parameter rule and the ``batch`` rule (weights sharded over
+        a data-parallel axis are gathered before use; TP weight shards are
+        never gathered).  Plus the ``batch`` axes themselves (the
+        reduce-scatter + all-gather gradient-sync layout), and — for cells
+        with KV caches (``kind != "train"``) — the ``seq_sp``
+        sequence-parallel cache axes (flash-decode gathers).
+      * **all-to-all** / **ragged-all-to-all** — expert-parallel token
+        dispatch: axes of the ``experts_ep`` / ``p_experts_ep`` rules.
+      * **collective-permute** — pipeline neighbour shifts: the ``pipe``
+        axis (plus ``batch`` axes: collective-permute shows up inside
+        XLA's all-gather/reduce-scatter lowerings on those axes).
+      * **collective-broadcast** — same budget as all-gather.
+
+    Every returned set also admits subsets (a gather over one axis of a
+    declared tuple is a partial, still-intended reshard) — that check
+    lives in the pass.  Anything else the partitioner inserts is traffic
+    the table never asked for: an *implicit reshard*.
+    """
+    rules = dict(rules if rules is not None else get_rules())
+    if mesh_axes is None:
+        mesh = mesh if mesh is not None else get_mesh()
+        mesh_axes = dict(mesh.shape) if mesh is not None else {}
+    present = {a for a, s in mesh_axes.items() if int(s) > 1}
+
+    def axset(val):
+        if val is None:
+            return frozenset()
+        axes = (val,) if isinstance(val, str) else tuple(val)
+        return frozenset(a for a in axes if a in present)
+
+    batch_axes = axset(rules.get("batch"))
+    gather: set = set()
+    if batch_axes:
+        gather.add(batch_axes)
+    for key, val in rules.items():
+        if key.startswith("p_"):
+            zero = axset(val) & batch_axes
+            if zero:
+                gather.add(zero)
+    if kind != "train":
+        sp = axset(rules.get("seq_sp"))
+        if sp:
+            gather.add(sp)
+    a2a: set = set()
+    for key in ("experts_ep", "p_experts_ep"):
+        ax = axset(rules.get(key))
+        if ax:
+            a2a.add(ax)
+    permute: set = set()
+    if "pipe" in present:
+        permute.add(frozenset(("pipe",)))
+    if batch_axes:
+        permute.add(batch_axes)
+    return {
+        "all-gather": gather,
+        "collective-broadcast": set(gather),
+        "all-to-all": a2a,
+        "ragged-all-to-all": set(a2a),
+        "collective-permute": permute,
+    }
+
+
 def shard(x, *axes):
     """Sharding-constraint hint: constrain ``x`` to ``logical(*axes)``.
 

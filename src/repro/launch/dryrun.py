@@ -168,7 +168,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              rules_patch: dict | None = None, tag: str = "",
              cfg_overrides: dict | None = None,
              microbatches: int | None = None,
-             overlap_sync: bool | None = None) -> dict:
+             overlap_sync: bool | None = None,
+             lint_spec: str | None = None,
+             lint_baseline=None) -> dict:
     import dataclasses
     cfg = configs.get(arch)
     if cfg_overrides:
@@ -177,9 +179,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     if microbatches is not None:
         shape = dataclasses.replace(shape, microbatches=microbatches)
     if shape_name == "long_500k" and not cfg.supports_long_context:
-        return {"arch": arch, "shape": shape_name, "status": "skipped",
-                "reason": "pure full-attention arch; 0.5M-token quadratic "
-                          "attention out of assigned scope (DESIGN.md §4)"}
+        return ({"arch": arch, "shape": shape_name, "status": "skipped",
+                 "reason": "pure full-attention arch; 0.5M-token quadratic "
+                           "attention out of assigned scope (DESIGN.md §4)"},
+                None)
     mesh = make_production_mesh(multi_pod=multi_pod)
     set_mesh(mesh)
     if rules_patch:
@@ -215,13 +218,33 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     except Exception as e:                                  # noqa: BLE001
         cost_d = {"error": str(e)}
 
+    # the traced jaxpr (pre-lowering) feeds the dtype-promotion lint pass;
+    # optional — some step fns may not trace standalone
+    jaxprs = []
+    try:
+        traced = fn.trace(*args) if isinstance(args, tuple) \
+            else fn.trace(**args)
+        jaxprs.append((f"{arch}.{shape_name}", traced.jaxpr))
+    except Exception:                                       # noqa: BLE001
+        pass
+
     # scoped capture: the compiled artifact flows through a per-cell Session
-    # (kernel/collective events -> kernel_freq tool), no ambient state
+    # (kernel/collective events -> kernel_freq tool), no ambient state;
+    # static lint runs inside the same session so findings land as events
+    from repro import analysis
+    from repro.dist.sharding import get_rules
     text = compiled.as_text()
     with pasta.Session(tools="kernel_freq:top_k=5",
                        name=f"dryrun/{arch}/{shape_name}") as sess:
         stats = sess.capture_compiled(text, label=f"{arch}.{shape_name}",
                                       default_trip=meta["default_trip"])
+        lint = analysis.run_passes(
+            text, lint_spec, stats=stats, session=sess,
+            baseline=lint_baseline,
+            mesh_axes=dict(mesh.shape), rules=get_rules(),
+            kind=shape.kind, default_trip=meta["default_trip"],
+            pods=mesh.shape.get("pod", 1), n_devices=chips,
+            jaxprs=jaxprs, label=f"{arch}.{shape_name}")
     kernel_freq = sess.reports()["kernel_freq"].data
 
     n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
@@ -255,11 +278,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "top_kernels": kernel_freq["top"],
         },
         "overlap_sync": overlap_sync,
+        "lint": lint.summary(),
         "model_flops_total": mf,
         "roofline": rl.as_dict(),
         "tag": tag,
     }
-    return out
+    return out, lint
+
+
+def _print_lint(lint, min_severity: str = "info") -> None:
+    for f in lint.unsuppressed(min_severity):
+        print(f"  [{f.severity}] {f.pass_name}: {f.message}")
+        if f.fix_hint:
+            print(f"      fix: {f.fix_hint}")
 
 
 def save_cell(out: dict) -> str:
@@ -289,6 +320,15 @@ def main():
                          "bucketed psum_start/psum_wait overlap pipeline")
     ap.add_argument("--set", action="append", default=[],
                     help="ModelConfig override key=value (perf knobs)")
+    ap.add_argument("--lint", action="store_true",
+                    help="print static-analysis findings per cell (the "
+                         "lint section lands in the JSON either way)")
+    ap.add_argument("--lint-spec", default=None,
+                    help="pass spec, e.g. "
+                         "'exposed-collectives:threshold_frac=0.3,"
+                         "peak-memory'")
+    ap.add_argument("--lint-baseline", default=None,
+                    help="baseline JSON of accepted findings to suppress")
     args = ap.parse_args()
 
     overrides = {}
@@ -326,12 +366,16 @@ def main():
                                    or os.path.exists(skip_path)):
             print(f"[dryrun] {arch} {shape}: cached")
             continue
+        lint = None
         try:
-            out = run_cell(arch, shape, args.multi_pod, tag=args.tag,
-                           cfg_overrides=overrides or None,
-                           microbatches=args.micro,
-                           overlap_sync={"auto": None, "blocking": False,
-                                         "overlap": True}[args.overlap_sync])
+            out, lint = run_cell(
+                arch, shape, args.multi_pod, tag=args.tag,
+                cfg_overrides=overrides or None,
+                microbatches=args.micro,
+                overlap_sync={"auto": None, "blocking": False,
+                              "overlap": True}[args.overlap_sync],
+                lint_spec=args.lint_spec,
+                lint_baseline=args.lint_baseline)
         except Exception as e:                              # noqa: BLE001
             out = {"arch": arch, "shape": shape, "mesh": mesh_tag,
                    "status": "error", "error": str(e),
@@ -340,11 +384,15 @@ def main():
         p = save_cell(out)
         if out["status"] == "ok":
             r = out["roofline"]
+            lt = out.get("lint", {})
             print(f"[dryrun] {arch} {shape} {out['mesh']}: OK "
                   f"compile={out['compile_s']}s "
                   f"compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
                   f"coll={r['collective_s']:.4f}s -> {r['bottleneck']} "
-                  f"frac={r['roofline_fraction']:.3f} ({p})")
+                  f"frac={r['roofline_fraction']:.3f} "
+                  f"lint={lt.get('n_unsuppressed', 0)} ({p})")
+            if args.lint and lint is not None:
+                _print_lint(lint)
         else:
             print(f"[dryrun] {arch} {shape}: {out['status']} "
                   f"{out.get('reason', out.get('error', ''))[:200]}")
